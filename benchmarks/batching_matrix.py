@@ -1,0 +1,78 @@
+"""Batching-strategy study (paper Figs. 10-12, Table III): strategies x
+traces x pipelines x injection rates -> throughput, throughput/energy, TTFT;
+emits a Table-III-style recommendation per cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import row, timeit
+from repro.core import (SLO, SystemSpec, WorkloadConfig, build_system,
+                        generate)
+from repro.core.workload import AZURE_CODE, AZURE_CONV
+
+STRATEGIES = ("continuous", "chunked", "disaggregated")
+
+
+def _spec(strategy: str, pipeline: str, n_clients: int = 4) -> SystemSpec:
+    kw: Dict = dict(with_pre_post=False)
+    if pipeline == "rag":
+        kw.update(with_rag=True, rag_embed_on_npu=True)
+    if pipeline == "kv":
+        kw.update(with_kv_retrieval=True)
+    if strategy == "disaggregated":
+        return SystemSpec(strategy="disaggregated",
+                          n_prefill=max(1, int(n_clients * 0.6)),
+                          n_decode=max(1, n_clients - int(n_clients * 0.6)),
+                          **kw)
+    return SystemSpec(n_llm_clients=n_clients, strategy=strategy, **kw)
+
+
+def _run_cell(strategy: str, trace, pipeline: str, rate: float,
+              n_requests: int = 80) -> Dict:
+    coord = build_system(_spec(strategy, pipeline))
+    wl = WorkloadConfig(trace=trace, rate=rate, n_requests=n_requests,
+                        pipeline={"kv": "kv", "rag": "rag"}.get(pipeline,
+                                                                "regular"),
+                        disaggregated=(strategy == "disaggregated"),
+                        postprocess=False, seed=3)
+    coord.submit(generate(wl))
+    m = coord.run()
+    horizon = max(r.completion_time for r in m.serviced)
+    slo = SLO(ttft_base=1.0 if pipeline in ("rag", "kv") else 0.25)
+    s = m.summary(horizon=horizon, total_energy=coord.total_energy, slo=slo)
+    return s
+
+
+def run() -> List[str]:
+    out = []
+    best: Dict[str, Dict[str, str]] = {}
+    for trace, tname in ((AZURE_CONV, "conv"), (AZURE_CODE, "code")):
+        for pipeline in ("regular", "rag", "kv"):
+            scores = {}
+            for strat in STRATEGIES:
+                import time
+                t0 = time.perf_counter()
+                s = _run_cell(strat, trace, pipeline, rate=3.0)
+                us = (time.perf_counter() - t0) * 1e6
+                scores[strat] = s
+                out.append(row(
+                    f"batching_{tname}_{pipeline}_{strat}", us,
+                    f"thpt={s['throughput_tok_s']:.0f} "
+                    f"ttft_p50={s['ttft_p50']*1e3:.0f}ms "
+                    f"tpot_p50={s['tpot_p50']*1e3:.1f}ms "
+                    f"tok/J={s.get('tok_per_joule', 0):.4f} "
+                    f"slo_ok={s.get('slo_ok')}"))
+            cell = f"{tname}/{pipeline}"
+            best[cell] = {
+                "TTFT": min(scores, key=lambda k: scores[k]["ttft_p50"]),
+                "Throughput": max(scores,
+                                  key=lambda k: scores[k]["throughput_tok_s"]),
+                "Throughput/Energy": max(
+                    scores, key=lambda k: scores[k].get("tok_per_joule", 0)),
+            }
+    for cell, rec in best.items():
+        out.append(row(f"tableIII_{cell.replace('/', '_')}", 0.0,
+                       f"ttft_best={rec['TTFT']} thpt_best={rec['Throughput']} "
+                       f"energy_best={rec['Throughput/Energy']}"))
+    return out

@@ -1,0 +1,35 @@
+"""Chunk-size sweep (the chunk axis of paper Fig. 6 + Sarathi's trade-off):
+small chunks protect TPOT (decode piggybacks often), large chunks cut prefill
+latency. TTFT/TPOT vs chunk size under a code-like workload."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.llm_scheduler import SchedulerLimits
+from repro.core.workload import AZURE_CODE
+
+
+def run() -> List[str]:
+    out = []
+    for chunk in (256, 512, 1024, 2048):
+        t0 = time.perf_counter()
+        spec = SystemSpec(n_llm_clients=4, strategy="chunked",
+                          limits=SchedulerLimits(chunk_size=chunk),
+                          with_pre_post=False)
+        coord = build_system(spec)
+        wl = WorkloadConfig(trace=AZURE_CODE, rate=3.0, n_requests=60,
+                            postprocess=False, seed=37)
+        coord.submit(generate(wl))
+        m = coord.run()
+        s = m.summary()
+        us = (time.perf_counter() - t0) * 1e6
+        out.append(row(f"chunk_{chunk}", us,
+                       f"ttft_p50={s['ttft_p50']*1e3:.0f}ms "
+                       f"ttft_p90={s['ttft_p90']*1e3:.0f}ms "
+                       f"tpot_p50={s['tpot_p50']*1e3:.1f}ms "
+                       f"tpot_p90={s['tpot_p90']*1e3:.1f}ms"))
+    return out

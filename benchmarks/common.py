@@ -1,0 +1,22 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

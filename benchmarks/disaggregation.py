@@ -1,0 +1,43 @@
+"""Global vs local disaggregation (paper §II-B): local pairs prefill/decode
+clients on fast intra-platform links, cutting KV-transfer time at the cost of
+load-balancing freedom. Also quantifies full vs layerwise transfer
+granularity (paper §III-B2)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.workload import AZURE_CODE
+
+
+def _run(mode: str, gran: str, rate: float = 3.0):
+    spec = SystemSpec(strategy="disaggregated", n_prefill=2, n_decode=2,
+                      disaggregation=mode, kv_transfer_granularity=gran,
+                      with_pre_post=False)
+    coord = build_system(spec)
+    wl = WorkloadConfig(trace=AZURE_CODE, rate=rate, n_requests=60,
+                        disaggregated=True, postprocess=False, seed=31)
+    coord.submit(generate(wl))
+    m = coord.run()
+    horizon = max(r.completion_time for r in m.serviced)
+    s = m.summary(horizon=horizon, total_energy=coord.total_energy)
+    s["comm_bytes"] = m.comm_bytes
+    return s
+
+
+def run() -> List[str]:
+    out = []
+    for mode in ("global", "local"):
+        for gran in ("full", "layerwise"):
+            t0 = time.perf_counter()
+            s = _run(mode, gran)
+            us = (time.perf_counter() - t0) * 1e6
+            out.append(row(
+                f"disagg_{mode}_{gran}", us,
+                f"ttft_p50={s['ttft_p50']*1e3:.0f}ms "
+                f"ttft_p90={s['ttft_p90']*1e3:.0f}ms "
+                f"tpot_p50={s['tpot_p50']*1e3:.1f}ms "
+                f"kv_transferred={s['comm_bytes']/1e9:.1f}GB"))
+    return out

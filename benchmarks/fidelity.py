@@ -1,0 +1,56 @@
+"""Fidelity check (paper Figs. 5-6): the event-driven simulator must agree
+with a closed-form replay of the same single-client schedule to ~2%.
+
+Closed form: one client, all requests arrive at t=0, continuous batching,
+equal output lengths -> total time = prefill(all) + sum of decode steps at
+known batch size/context. Any drift is simulator bookkeeping error.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import row, timeit
+from repro.configs import get_config
+from repro.core import SystemSpec, build_system
+from repro.core.request import LLM, Request, Stage
+from repro.perfmodel import analytical as ana
+from repro.perfmodel.hardware import ClusterSpec, H100
+
+
+def closed_form(n: int, in_tok: int, out_tok: int, cluster, model) -> float:
+    """One batched prefill (within the scheduler's 8192-token budget) emits
+    token #1, then out_tok-1 batched decode steps with growing context."""
+    t = ana.prefill_time(model, cluster, in_tok * n, 1).time
+    ctx = in_tok + 1
+    for _ in range(out_tok - 1):
+        t += ana.decode_step_time(model, cluster, n, ctx).time
+        ctx += 1
+    return t
+
+
+def run() -> List[str]:
+    out = []
+    model = get_config("llama3_70b")
+    for n, in_tok, out_tok in [(4, 512, 16), (8, 1024, 32), (4, 2048, 24)]:
+        spec = SystemSpec(n_llm_clients=1, with_pre_post=False)
+        coord = build_system(spec)
+        cluster = next(iter(coord.clients.values())).cluster
+        reqs = [Request(arrival=0.0, input_tokens=in_tok,
+                        output_tokens=out_tok, stages=[Stage(LLM)])
+                for _ in range(n)]
+        def sim():
+            c = build_system(spec)
+            c.submit([Request(arrival=0.0, input_tokens=in_tok,
+                              output_tokens=out_tok, stages=[Stage(LLM)])
+                      for _ in range(n)])
+            return c.run()
+        us = timeit(sim, n=3)
+        coord.submit(reqs)
+        m = coord.run()
+        sim_e2e = max(r.completion_time for r in m.serviced)
+        want = closed_form(n, in_tok, out_tok, cluster, model)
+        err = abs(sim_e2e - want) / want * 100
+        out.append(row(f"fidelity_n{n}_in{in_tok}", us,
+                       f"sim={sim_e2e:.3f}s analytic={want:.3f}s err={err:.2f}%"))
+        assert err < 2.0, f"fidelity error {err:.2f}% exceeds 2% target"
+    return out

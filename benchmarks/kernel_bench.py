@@ -1,0 +1,49 @@
+"""Per-kernel micro-benchmarks: wall time of the executable path on this host
+(jnp reference — the Pallas kernels target TPU and are validated in interpret
+mode) + derived FLOPs/bytes for the roofline discussion."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> List[str]:
+    out = []
+    # flash attention (prefill) sweep
+    for b, s, nh, kvh, d in [(1, 1024, 8, 2, 128), (2, 2048, 16, 4, 128)]:
+        q = jax.random.normal(KEY, (b, s, nh, d), jnp.float32)
+        k = jax.random.normal(KEY, (b, s, kvh, d), jnp.float32)
+        v = jax.random.normal(KEY, (b, s, kvh, d), jnp.float32)
+        fn = jax.jit(lambda q, k, v: ref.chunked_flash_attention(
+            q, k, v, causal=True, block_q=512, block_k=512))
+        us = timeit(lambda: fn(q, k, v).block_until_ready(), n=3)
+        fl = 4.0 * b * nh * s * s / 2 * d
+        out.append(row(f"flash_b{b}_s{s}_h{nh}", us,
+                       f"gflops={fl/1e9:.1f} eff_gflops_s={fl/us/1e3:.1f}"))
+    # decode attention sweep
+    for b, S, nh, kvh, d in [(8, 4096, 32, 8, 128), (32, 2048, 16, 2, 128)]:
+        q = jax.random.normal(KEY, (b, 1, nh, d), jnp.float32)
+        k = jax.random.normal(KEY, (b, S, kvh, d), jnp.float32)
+        v = jax.random.normal(KEY, (b, S, kvh, d), jnp.float32)
+        lens = jnp.full((b,), S - 1, jnp.int32)
+        fn = jax.jit(lambda q, k, v, l: ref.decode_attention(q, k, v, l))
+        us = timeit(lambda: fn(q, k, v, lens).block_until_ready(), n=3)
+        by = 2.0 * b * S * kvh * d * 4
+        out.append(row(f"decode_b{b}_S{S}", us,
+                       f"gbytes={by/1e9:.2f} eff_gb_s={by/us/1e3:.1f}"))
+    # pq scan
+    for N, M in [(100_000, 16), (500_000, 8)]:
+        codes = jax.random.randint(KEY, (N, M), 0, 256)
+        lut = jax.random.normal(KEY, (M, 256), jnp.float32)
+        fn = jax.jit(ref.pq_scan)
+        us = timeit(lambda: fn(codes, lut).block_until_ready(), n=3)
+        out.append(row(f"pqscan_N{N}_M{M}", us,
+                       f"mcodes_s={N*M/us:.1f}"))
+    return out

@@ -1,0 +1,46 @@
+"""Remote KV-cache storage (paper Fig. 15 / §V-B): per-client LPDDR vs
+platform-shared vs rack-shared vs rack+DCN vs recompute, for short (4K) and
+long (24K) cached contexts. Metric: end-to-end latency percentiles."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.perfmodel.hardware import (CacheTierSpec, DCN, TIER_LOCAL_LPDDR,
+                                      TIER_PLATFORM, TIER_RACK)
+
+TIER_RACK_DCN = CacheTierSpec("rack+dcn", 64e12, DCN.latency, DCN.bandwidth,
+                              0.999)
+
+CONFIGS = {
+    "A_per_client": (TIER_LOCAL_LPDDR,),
+    "B_platform": (TIER_PLATFORM,),
+    "C_rack": (TIER_RACK,),
+    "C_dcn": (TIER_RACK, TIER_RACK_DCN),
+    "recompute": (),
+}
+
+
+def run() -> List[str]:
+    out = []
+    for cached_tokens, label, rate in ((4_000, "short4k", 2.0),
+                                       (24_000, "long24k", 0.8)):
+        for cname, tiers in CONFIGS.items():
+            t0 = time.perf_counter()
+            spec = SystemSpec(n_llm_clients=4, with_kv_retrieval=True,
+                              kv_tiers=tiers, with_pre_post=False)
+            coord = build_system(spec)
+            wl = WorkloadConfig(rate=rate, n_requests=60, pipeline="kv",
+                                kv_cached_tokens=cached_tokens,
+                                postprocess=False, seed=8)
+            coord.submit(generate(wl))
+            m = coord.run()
+            s = m.summary()
+            us = (time.perf_counter() - t0) * 1e6
+            out.append(row(
+                f"kvstore_{label}_{cname}", us,
+                f"e2e_p50={s['e2e_p50']:.2f}s e2e_p90={s['e2e_p90']:.2f}s "
+                f"ttft_p90={s['ttft_p90']*1e3:.0f}ms"))
+    return out

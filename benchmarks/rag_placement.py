@@ -1,0 +1,60 @@
+"""RAG placement study (paper Fig. 9 / §IV-B): embedding model x hardware
+placement -> TTFT breakdown; shows large embed models need NPU offload and
+PCIe transfer is never the bottleneck."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.configs.base import ModelConfig
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+
+
+def _mistral_7b_embed() -> ModelConfig:
+    return ModelConfig(name="mistral-7b-embed", family="dense", num_layers=32,
+                       d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336,
+                       vocab_size=32000, mlp_type="swiglu", attn_type="gqa",
+                       encoder_only=True)
+
+
+def run() -> List[str]:
+    out = []
+    from repro.core.system import _embed_model_small
+    embeds = [("e5-base", _embed_model_small()),
+              ("mistral-7b", _mistral_7b_embed())]
+    # paper configs: large CPU, small CPU, A100-for-embed + large CPU
+    hw = [("large_cpu", dict(rag_colocated=True)),
+          ("small_cpu", dict(rag_colocated=True)),
+          ("a100+cpu", dict(rag_colocated=False, rag_embed_on_npu=True))]
+    for ename, emodel in embeds:
+        for hname, kw in hw:
+            t0 = time.perf_counter()
+            spec = SystemSpec(n_llm_clients=1, model="llama3_70b",
+                              with_rag=True, with_pre_post=False,
+                              embed_model=emodel, **kw)
+            coord = build_system(spec)
+            if hname == "small_cpu":   # swap the RAG cluster to SPR
+                from repro.perfmodel.hardware import ClusterSpec, SPR_CPU
+                for c in coord.clients.values():
+                    if c.kind == "rag":
+                        c.cluster = ClusterSpec(SPR_CPU, 1, 1)
+            wl = WorkloadConfig(rate=0.5, n_requests=20, pipeline="rag",
+                                postprocess=False, seed=6)
+            coord.submit(generate(wl))
+            m = coord.run()
+            s = m.summary()
+            # stage breakdown
+            rag_time = []
+            for r in m.serviced:
+                for st in r.stages:
+                    if st.kind.startswith("rag") and st.end_time is not None:
+                        rag_time.append(st.end_time - st.start_time)
+            us = (time.perf_counter() - t0) * 1e6
+            import numpy as np
+            out.append(row(
+                f"rag_{ename}_{hname}", us,
+                f"ttft_p50={s['ttft_p50']*1e3:.0f}ms "
+                f"rag_stage_mean={np.mean(rag_time)*1e3:.0f}ms "
+                f"comm_bytes={m.comm_bytes:.0f}"))
+    return out

@@ -1,0 +1,43 @@
+"""Reasoning goodput (paper Fig. 8): SLO-compliant goodput vs injection rate
+for conv/code traces with multi-path reasoning branches."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.core import SLO, SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.workload import AZURE_CODE, AZURE_CONV
+
+
+def run() -> List[str]:
+    out = []
+    cases = [("conv", AZURE_CONV, 8, 2.0), ("code", AZURE_CODE, 4, 2.0)]
+    for tname, trace, branches, scale in cases:
+        for strat in ("continuous", "chunked", "disaggregated"):
+            for rate in (0.25, 0.5, 1.0):
+                t0 = time.perf_counter()
+                spec = (SystemSpec(strategy="disaggregated", n_prefill=2,
+                                   n_decode=2, with_pre_post=False)
+                        if strat == "disaggregated"
+                        else SystemSpec(n_llm_clients=4, strategy=strat,
+                                        with_pre_post=False))
+                coord = build_system(spec)
+                wl = WorkloadConfig(trace=trace, rate=rate, n_requests=40,
+                                    pipeline="reasoning",
+                                    reasoning_scale=scale,
+                                    reasoning_branches=branches,
+                                    disaggregated=(strat == "disaggregated"),
+                                    postprocess=False, seed=5)
+                coord.submit(generate(wl))
+                m = coord.run()
+                horizon = max(r.completion_time for r in m.serviced)
+                slo = SLO()
+                good = m.goodput(slo, horizon)
+                us = (time.perf_counter() - t0) * 1e6
+                out.append(row(
+                    f"reasoning_{tname}_{strat}_r{rate}", us,
+                    f"goodput={good:.0f}tok/s "
+                    f"thpt={m.throughput(horizon):.0f} "
+                    f"ttft_p90={m.summary()['ttft_p90']*1e3:.0f}ms"))
+    return out

@@ -1,0 +1,55 @@
+"""ML-assisted modeling (paper §III-E1): polynomial-regression fit quality and
+the simulation speedup from replacing per-event analytical evaluation with the
+jit/vmap batched predictor (paper claims 20-50x)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.configs import get_config
+from repro.perfmodel import analytical as ana
+from repro.perfmodel import regression as reg
+from repro.perfmodel.hardware import ClusterSpec, H100
+
+
+def run() -> List[str]:
+    out = []
+    model = get_config("llama3_70b")
+    cluster = ClusterSpec(H100, n_chips=2, tp=2)
+
+    t0 = time.perf_counter()
+    dm = reg.fit_decode_model(model, cluster)
+    fit_us = (time.perf_counter() - t0) * 1e6
+    # holdout error at unseen points
+    errs = []
+    for b, c in [(3, 700), (24, 3000), (96, 6000), (48, 10_000)]:
+        want = ana.decode_step_time(model, cluster, b, c).time
+        got = float(dm.predict([b], [c])[0])
+        errs.append(abs(got - want) / want)
+    out.append(row("regression_decode_fit", fit_us,
+                   f"mse={dm.mse:.2e} holdout_relerr={np.mean(errs)*100:.1f}%"))
+
+    pm = reg.fit_prefill_model(model, cluster)
+    out.append(row("regression_prefill_fit", 0.0, f"mse={pm.mse:.2e}"))
+
+    # speedup: 10k predictions, analytical loop vs batched predictor
+    bs = np.random.default_rng(0).integers(1, 128, 10_000)
+    cs = np.random.default_rng(1).integers(128, 8192, 10_000)
+
+    def analytical_loop():
+        for b, c in zip(bs[:200], cs[:200]):
+            ana.decode_step_time(model, cluster, int(b), int(c))
+
+    def batched():
+        reg.batched_decode_predict(dm, bs, cs).block_until_ready()
+
+    t_ana = timeit(analytical_loop, n=3) / 200       # per prediction
+    t_reg = timeit(batched, n=3) / 10_000
+    out.append(row("regression_speedup", t_reg,
+                   f"analytical_us={t_ana:.2f} regression_us={t_reg:.4f} "
+                   f"speedup={t_ana/max(t_reg,1e-9):.0f}x"))
+    return out

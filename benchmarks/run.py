@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = [
+    "fidelity",          # Figs. 5-6
+    "regression_fit",    # SIII-E1
+    "batching_matrix",   # Figs. 10-12 + Table III
+    "reasoning",         # Fig. 8
+    "rag_placement",     # Fig. 9
+    "kv_storage",        # Fig. 15
+    "scaling_clients",   # Fig. 13
+    "disaggregation",    # SII-B global/local + SIII-B2 transfer granularity
+    "chunk_sweep",       # Fig. 6 chunk axis / Sarathi trade-off
+    "spec_decode",       # SIII-E1 optional optimization modeling
+    "kernel_bench",      # kernel rooflines
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for line in mod.run():
+                print(line, flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # surface but keep going
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Client scaling (paper Fig. 13): highest per-client rate meeting the SLO as
+the client count grows, per strategy."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.core import SLO, SystemSpec, WorkloadConfig, build_system, generate
+
+
+# TPOT baseline calibrated to our analytical 2xH100 TP2 model (~32ms/step at
+# full batch); the paper's relative strategy ordering is the deliverable.
+_SLO = SLO(ttft_base=0.4, tpot_base=0.040)
+
+
+def _max_rate(strategy: str, n_clients: int, rates=(0.5, 1.0, 2.0, 4.0)) -> float:
+    best = 0.0
+    for rate in rates:
+        if strategy == "disaggregated":
+            n_p = max(1, int(n_clients * 0.6))
+            spec = SystemSpec(strategy="disaggregated", n_prefill=n_p,
+                              n_decode=max(1, n_clients - n_p),
+                              with_pre_post=False)
+        else:
+            spec = SystemSpec(n_llm_clients=n_clients, strategy=strategy,
+                              with_pre_post=False)
+        coord = build_system(spec)
+        wl = WorkloadConfig(rate=rate * n_clients, n_requests=60,
+                            disaggregated=(strategy == "disaggregated"),
+                            postprocess=False, seed=9)
+        coord.submit(generate(wl))
+        m = coord.run()
+        if m.slo_satisfied(_SLO):
+            best = rate
+    return best
+
+
+def run() -> List[str]:
+    out = []
+    for strategy in ("continuous", "chunked", "disaggregated"):
+        for n in (2, 4, 8):
+            t0 = time.perf_counter()
+            r = _max_rate(strategy, n)
+            us = (time.perf_counter() - t0) * 1e6
+            out.append(row(f"scaling_{strategy}_c{n}", us,
+                           f"max_rate_per_client={r}req/s"))
+    return out

@@ -1,0 +1,37 @@
+"""Speculative decoding trade-off (paper §III-E1 optimization list): TPOT of
+plain decode vs draft-and-verify for varying acceptance rates and draft
+lengths, Llama-3-70B target + 2B-class draft on 2xH100 TP2."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.configs import get_config
+from repro.core.system import _guard_model_2b
+from repro.perfmodel import analytical as ana
+from repro.perfmodel.hardware import ClusterSpec, H100
+
+
+def run() -> List[str]:
+    out = []
+    target = get_config("llama3_70b")
+    draft = _guard_model_2b()
+    cluster = ClusterSpec(H100, n_chips=2, tp=2)
+    batch, ctx = 16, 2048
+    base = ana.decode_step_time(target, cluster, batch, ctx)
+    out.append(row("specdec_baseline", base.time * 1e6,
+                   f"tpot={base.time*1e3:.1f}ms tokens_per_step=1.0"))
+    for k in (2, 4, 8):
+        for alpha in (0.6, 0.8, 0.9):
+            t0 = time.perf_counter()
+            cost, accepted = ana.speculative_decode_step(
+                target, draft, cluster, batch, ctx, k=k, alpha=alpha)
+            eff_tpot = cost.time / accepted
+            us = (time.perf_counter() - t0) * 1e6
+            speedup = base.time / eff_tpot
+            out.append(row(
+                f"specdec_k{k}_a{alpha}", us,
+                f"eff_tpot={eff_tpot*1e3:.1f}ms accepted={accepted:.2f} "
+                f"speedup={speedup:.2f}x"))
+    return out

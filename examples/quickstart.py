@@ -1,0 +1,39 @@
+"""Quickstart: simulate a 4-client Llama-3-70B serving system under a
+conversational workload and print the latency/throughput summary.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import json
+
+from repro.core import (SLO, SystemSpec, WorkloadConfig, build_system,
+                        generate)
+from repro.core.tracing import to_chrome_trace
+
+
+def main():
+    # 1. describe the serving system (paper Fig. 4d)
+    spec = SystemSpec(
+        model="llama3_70b",
+        n_llm_clients=4,          # 4 clients x (2xH100, TP2)
+        strategy="continuous",    # vLLM-style batching
+        router_policy="load_based",
+        router_metric="tokens_remaining",
+    )
+    coord = build_system(spec)
+
+    # 2. describe the workload (Azure-conv-shaped, poisson arrivals)
+    wl = WorkloadConfig(rate=2.0, n_requests=100, pipeline="regular", seed=0)
+    coord.submit(generate(wl))
+
+    # 3. run the discrete-event simulation
+    metrics = coord.run()
+
+    # 4. inspect
+    print(json.dumps(metrics.summary(total_energy=coord.total_energy,
+                                     slo=SLO()), indent=2, default=str))
+    path = to_chrome_trace(metrics.serviced, "/tmp/hermes_trace.json")
+    print(f"chrome trace written to {path} (open in chrome://tracing)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Fault-tolerant checkpointing: step-atomic msgpack + manifest.
+
+Layout:  <dir>/step_<N>/arrays.msgpack  +  <dir>/step_<N>/MANIFEST.json
+A checkpoint directory only becomes visible once fully written (tmp-dir
+rename), so a mid-save crash never corrupts the restore path. ``restore``
+picks the newest complete step; older steps are garbage-collected with
+``keep`` retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _pack_array(a: np.ndarray) -> Dict:
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: Dict) -> np.ndarray:
+    dt = d["dtype"]
+    # numpy can't parse 'bfloat16'; round-trip through uint16 view
+    if dt == "bfloat16":
+        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(raw.view(jnp.bfloat16.dtype) if hasattr(
+            jnp.bfloat16, "dtype") else raw, dtype=jnp.bfloat16)
+    return np.frombuffer(d["data"], dt).reshape(d["shape"])
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    payload = {k: _pack_array(v) for k, v in flat.items()}
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        with open(os.path.join(tmp, "arrays.msgpack"), "wb") as f:
+            f.write(msgpack.packb(payload))
+        manifest = {"step": step, "n_arrays": len(flat),
+                    "bytes": sum(v.nbytes for v in flat.values()),
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomic publish
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for d in sorted(os.listdir(ckpt_dir)):
+        if not d.startswith("step_"):
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, d, "MANIFEST.json")):
+            best = int(d.split("_")[1])
+    return best
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None
+            ) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). Returns (tree, manifest)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "arrays.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    flat_like = _flatten(jax.tree.map(
+        lambda t: np.zeros((0,)) if isinstance(t, jax.ShapeDtypeStruct) else t,
+        like))
+    keys = list(flat_like.keys())
+    missing = [k for k in keys if k not in payload]
+    if missing:
+        raise KeyError(f"checkpoint missing arrays: {missing[:5]}...")
+    arrays = {k: _unpack_array(payload[k]) for k in keys}
+    leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for kp, leaf in leaves_kp:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        a = arrays[key]
+        want_dtype = leaf.dtype if hasattr(leaf, "dtype") else a.dtype
+        new_leaves.append(jnp.asarray(a, dtype=want_dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest

@@ -1,0 +1,55 @@
+"""Architecture config registry.
+
+Each assigned architecture lives in its own module (``<arch>.py``) exposing
+``CONFIG`` (the exact published config) and ``reduced()`` (a tiny same-family
+config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+    applicable_shapes,
+)
+
+ARCH_IDS = (
+    "nemotron_4_340b",
+    "minicpm3_4b",
+    "gemma_2b",
+    "internlm2_20b",
+    "zamba2_7b",
+    "pixtral_12b",
+    "xlstm_1_3b",
+    "deepseek_v2_236b",
+    "deepseek_v2_lite_16b",
+    "hubert_xlarge",
+    # the paper's own case-study model (Llama-3-70B class)
+    "llama3_70b",
+)
+
+
+def _norm(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

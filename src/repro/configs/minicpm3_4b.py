@@ -1,0 +1,42 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B]. Dense with MLA attention."""
+from repro.configs.base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73_448,
+    mlp_type="swiglu",
+    attn_type="mla",
+    mla=MLAConfig(
+        kv_lora_rank=256,
+        q_lora_rank=768,
+        qk_nope_head_dim=64,
+        qk_rope_head_dim=32,
+        v_head_dim=64,
+    ),
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="minicpm3-4b-smoke",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=512,
+        mla=MLAConfig(
+            kv_lora_rank=32,
+            q_lora_rank=48,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+        ),
+    )

@@ -1,0 +1,8 @@
+"""HERMES core: heterogeneous multi-stage LLM inference simulator (the
+paper's primary contribution — coordinator, clients, schedulers, batching,
+memory hierarchy, comm model, workloads, metrics, fault handling)."""
+from repro.core.coordinator import Coordinator, CoordinatorConfig  # noqa: F401
+from repro.core.metrics import SLO, MetricsCollector  # noqa: F401
+from repro.core.system import SystemSpec, build_system  # noqa: F401
+from repro.core.workload import (AZURE_CODE, AZURE_CONV, WorkloadConfig,  # noqa: F401
+                                 generate)

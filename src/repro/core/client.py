@@ -1,0 +1,209 @@
+"""Clients (paper §III-C): a hardware cluster + scheduler specialized for a
+subset of stages. Five types: pre/post-processing, RAG (embed / retrieve),
+KV-cache retrieval, and LLM inference (continuous/chunked/static/mixed or a
+disaggregated prefill/decode half).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import request as rq
+from repro.core.llm_scheduler import (ClientPerf, LLMScheduler, LLMStep,
+                                      SchedulerLimits)
+from repro.core.memory import (expected_retrieval_latency,
+                               sample_retrieval_latency)
+from repro.core.scheduler import BatchedScheduler, SequentialScheduler
+from repro.perfmodel import analytical as ana
+from repro.perfmodel import rag_model
+from repro.perfmodel.hardware import CacheTierSpec, ClusterSpec
+
+
+class Client:
+    """Base client: owns a scheduler and a ClusterSpec."""
+
+    kind = "base"
+
+    def __init__(self, name: str, cluster: ClusterSpec, stages: Sequence[str]):
+        self.name = name
+        self.cluster = cluster
+        self.stages = tuple(stages)
+        self.busy = False
+        self.failed = False
+        self.slowdown = 1.0            # straggler factor (>1 => slower)
+        self.total_energy = 0.0
+        self.steps_done = 0
+        self.served = 0
+
+    # scheduler protocol -------------------------------------------------
+    def add(self, req: rq.Request):
+        self.scheduler.add(req)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def plan_step(self):
+        step = self.scheduler.plan_step()
+        if step is not None and self.slowdown != 1.0:
+            step.duration *= self.slowdown
+        return step
+
+    def finish_step(self, step, now: float) -> List[rq.Request]:
+        done = self.scheduler.finish_step(step, now)
+        self.total_energy += getattr(step, "energy", 0.0)
+        self.steps_done += 1
+        self.served += len(done)
+        return done
+
+    def drain(self) -> List[rq.Request]:
+        return self.scheduler.drain()
+
+    # load metrics for routing (paper §III-B1) ---------------------------
+    def load(self, metric: str = "queue") -> float:
+        sched = self.scheduler
+        waiting = list(getattr(sched, "waiting", []))
+        running = list(getattr(sched, "running", []))
+        if metric == "queue":
+            return len(waiting) + len(running)
+        if metric == "input_len":
+            return sum(r.input_tokens for r in waiting + running)
+        if metric == "output_len":
+            return sum(r.output_tokens for r in waiting + running)
+        if metric == "kv_size":
+            mm = getattr(sched, "memory", None)
+            return mm.used if mm else 0.0
+        if metric == "tokens_remaining":
+            return sum(r.remaining_tokens + max(
+                0, r.effective_prefill_tokens - r.prefilled_tokens)
+                for r in waiting + running)
+        raise ValueError(metric)
+
+
+class PreprocessClient(Client):
+    kind = "preprocess"
+
+    def __init__(self, name: str, cluster: ClusterSpec,
+                 per_token_us: float = 0.02, base_us: float = 50.0,
+                 n_cores: int = 16):
+        super().__init__(name, cluster, (rq.PREPROCESS,))
+        fn = lambda r: (base_us + per_token_us * r.input_tokens) * 1e-6
+        en = lambda batch, dur: dur * cluster.chip.power * 0.2
+        self.scheduler = SequentialScheduler(fn, n_cores=n_cores, energy_fn=en)
+
+
+class PostprocessClient(Client):
+    """Detokenize + safety filters; optionally prices a small (~2B) guard
+    model forward pass (paper §III-E4)."""
+
+    kind = "postprocess"
+
+    def __init__(self, name: str, cluster: ClusterSpec,
+                 guard_model: Optional[ModelConfig] = None, n_cores: int = 16):
+        super().__init__(name, cluster, (rq.POSTPROCESS,))
+        self.guard_model = guard_model
+
+        def fn(r: rq.Request) -> float:
+            t = 1e-5 + 2e-8 * r.decoded_tokens * r.branches  # word-lookup pass
+            if guard_model is not None:
+                t += ana.prefill_time(guard_model, cluster,
+                                      max(8, r.decoded_tokens)).time
+            return t
+
+        en = lambda batch, dur: dur * cluster.chip.power * 0.3
+        self.scheduler = SequentialScheduler(fn, n_cores=n_cores, energy_fn=en)
+
+
+class RAGClient(Client):
+    """Embedding and/or retrieval+rerank (paper §III-C2, §IV-B). When
+    ``co_located`` it serves both RAG stages on one cluster."""
+
+    kind = "rag"
+
+    def __init__(self, name: str, cluster: ClusterSpec,
+                 embed_model: Optional[ModelConfig] = None,
+                 ivf: rag_model.IVFPQConfig = rag_model.IVFPQConfig(),
+                 serve_embed: bool = True, serve_retrieve: bool = True):
+        stages = ([rq.RAG_EMBED] if serve_embed else []) + \
+                 ([rq.RAG_RETRIEVE] if serve_retrieve else [])
+        super().__init__(name, cluster, stages)
+        self.embed_model = embed_model
+        self.ivf = ivf
+        self.serve_embed = serve_embed
+        self.serve_retrieve = serve_retrieve
+
+        def latency(batch: List[rq.Request]) -> float:
+            t = 0.0
+            for r in batch:
+                if self.serve_embed and r.current_stage.kind == rq.RAG_EMBED:
+                    if embed_model is not None:
+                        t = max(t, ana.prefill_time(embed_model, cluster,
+                                                    r.input_tokens).time)
+                    if r.current_stage.params.get("co_located"):
+                        t += (rag_model.retrieval_time(ivf, cluster).time
+                              + rag_model.rerank_time(ivf, cluster).time)
+                if self.serve_retrieve and r.current_stage.kind == rq.RAG_RETRIEVE:
+                    t += (rag_model.retrieval_time(ivf, cluster).time
+                          + rag_model.rerank_time(ivf, cluster).time)
+            return t
+
+        en = lambda batch, dur: dur * cluster.chip.power * 0.5
+        self.scheduler = BatchedScheduler(latency, energy_fn=en)
+
+
+class KVRetrievalClient(Client):
+    """Multi-level cache retrieval (paper §III-C3/§III-E3, Eq. 1)."""
+
+    kind = "kv_retrieval"
+
+    def __init__(self, name: str, cluster: ClusterSpec,
+                 tiers: Sequence[CacheTierSpec],
+                 kv_bytes_per_token: float = 160e3,
+                 recompute_fn=None, sample: bool = True, seed: int = 0):
+        super().__init__(name, cluster, (rq.KV_RETRIEVAL,))
+        self.tiers = list(tiers)
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self.recompute_fn = recompute_fn or (lambda size: 0.2)
+        self.rng = np.random.default_rng(seed)
+        self.sample = sample
+
+        def latency(batch: List[rq.Request]) -> float:
+            t = 0.0
+            for r in batch:
+                size = r.cached_tokens * self.kv_bytes_per_token
+                miss = self.recompute_fn(size)
+                if self.sample:
+                    lt = sample_retrieval_latency(size, self.tiers, miss, self.rng)
+                else:
+                    lt = expected_retrieval_latency(size, self.tiers, miss)
+                t = max(t, lt)
+            return t
+
+        en = lambda batch, dur: dur * cluster.chip.power * 0.4
+        self.scheduler = BatchedScheduler(latency, energy_fn=en)
+
+
+class LLMClient(Client):
+    kind = "llm"
+
+    def __init__(self, name: str, cluster: ClusterSpec, model_cfg: ModelConfig,
+                 strategy: str = "continuous",
+                 limits: SchedulerLimits = SchedulerLimits(),
+                 packing: str = "fcfs", perf: Optional[ClientPerf] = None,
+                 group: Optional[str] = None):
+        stage_map = {"prefill_only": (rq.PREFILL,),
+                     "decode_only": (rq.DECODE,)}
+        stages = stage_map.get(strategy, (rq.LLM,))
+        super().__init__(name, cluster, stages)
+        self.model_cfg = model_cfg
+        self.strategy = strategy
+        self.group = group               # local-disaggregation pairing group
+        self.scheduler = LLMScheduler(strategy, model_cfg, cluster,
+                                      perf=perf, limits=limits, packing=packing)
+
+    @property
+    def kv_transfer_bytes_fn(self):
+        per_tok = self.scheduler.kv_per_token
+        return lambda req: req.total_context * per_tok

@@ -1,0 +1,253 @@
+"""Global Coordinator (paper §III-B, Algorithm 1).
+
+Owns the global event queue + clock, routes request stages to clients,
+prices inter-client transfers through the Network, and handles client
+fail/recover/add/remove for fault tolerance and elastic scaling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core import events as ev
+from repro.core import request as rq
+from repro.core.client import Client, LLMClient
+from repro.core.comm import Network
+from repro.core.metrics import SLO, MetricsCollector
+from repro.core.router import Router, RoundRobinRouter
+
+
+@dataclass
+class CoordinatorConfig:
+    disaggregation: str = "global"        # global | local (paper §II-B)
+    kv_transfer_granularity: str = "layerwise"  # full | layerwise
+    straggler_deadline: Optional[float] = None  # re-route if queued longer
+    max_sim_time: float = 1e7
+
+
+class Coordinator:
+    def __init__(self, clients: List[Client], router: Optional[Router] = None,
+                 network: Optional[Network] = None,
+                 cfg: CoordinatorConfig = CoordinatorConfig()):
+        self.clients: Dict[str, Client] = {c.name: c for c in clients}
+        self.router = router or RoundRobinRouter()
+        self.network = network or Network()
+        self.cfg = cfg
+        self.queue = ev.EventQueue()
+        self.metrics = MetricsCollector()
+        self._active_step: Dict[str, object] = {}
+        self._accepted = 0
+        self._dispatch_times: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, requests: List[rq.Request]):
+        for r in requests:
+            self._accepted += 1
+            self.queue.push(r.arrival, ev.REQUEST_ARRIVAL, r)
+
+    def schedule_failure(self, client_name: str, at: float,
+                         recover_at: Optional[float] = None):
+        self.queue.push(at, ev.CLIENT_FAIL, client_name)
+        if recover_at is not None:
+            self.queue.push(recover_at, ev.CLIENT_RECOVER, client_name)
+
+    def schedule_add_client(self, client: Client, at: float):
+        self.queue.push(at, ev.CLIENT_ADD, client)
+
+    def schedule_remove_client(self, client_name: str, at: float):
+        self.queue.push(at, ev.CLIENT_REMOVE, client_name)
+
+    # ------------------------------------------------------------------
+    # stages that may be absent from a system spec; requests skip them
+    _OPTIONAL_STAGES = (rq.PREPROCESS, rq.POSTPROCESS)
+
+    def _candidates(self, req: rq.Request) -> Optional[List[Client]]:
+        stage = req.current_stage.kind
+        cands = [c for c in self.clients.values()
+                 if stage in c.stages and not c.failed]
+        if not cands and stage in self._OPTIONAL_STAGES:
+            return None
+        # local disaggregation: decode must stay in the prefill client's group
+        if stage == rq.DECODE and self.cfg.disaggregation == "local":
+            prev = next((s.client for s in reversed(req.stages[:req.stage_idx])
+                         if s.kind == rq.PREFILL and s.client), None)
+            if prev is not None:
+                g = getattr(self.clients.get(prev), "group", None)
+                if g is not None:
+                    grouped = [c for c in cands
+                               if getattr(c, "group", None) == g]
+                    cands = grouped or cands
+        if not cands:
+            raise RuntimeError(f"no live client serves stage '{stage}'")
+        return cands
+
+    def _dispatch(self, req: rq.Request, now: float):
+        """Route current stage to a client (Algorithm 1 'Request-push')."""
+        while not req.done and self._candidates(req) is None:
+            req.advance_stage(now)     # optional stage with no client: skip
+        if req.done:
+            self.metrics.complete(req)
+            return
+        client = self.router.route(req, self._candidates(req), now)
+        st = req.current_stage
+        st.client = client.name
+        st.dispatch_time = now
+        st.start_time = now
+        self._dispatch_times[req.rid] = now
+        client.add(req)
+        self._kick(client, now)
+
+    def _kick(self, client: Client, now: float):
+        if client.failed or client.name in self._active_step:
+            return
+        step = client.plan_step()
+        if step is None:
+            return
+        self._active_step[client.name] = step
+        self.queue.push(now + step.duration, ev.CLIENT_STEP_DONE,
+                        (client.name, step))
+
+    # ------------------------------------------------------------------
+    def _transfer_and_forward(self, req: rq.Request, src: str, now: float):
+        """Price inter-stage data movement, then re-enqueue as a new request
+        event at the destination (paper §III-B2)."""
+        prev_stage = req.stages[req.stage_idx - 1] if req.stage_idx else None
+        while not req.done and self._candidates(req) is None:
+            req.advance_stage(now)     # optional stage with no client: skip
+        nxt = req.current_stage
+        if nxt is None:
+            self.metrics.complete(req)
+            return
+        # choose destination now so we can price the wire
+        dst_client = self.router.route(req, self._candidates(req), now)
+        nbytes, gran, n_layers = 0.0, "full", 1
+        if prev_stage is not None and nxt is not None:
+            if prev_stage.kind == rq.PREFILL and nxt.kind == rq.DECODE:
+                src_c = self.clients.get(src)
+                if isinstance(src_c, LLMClient):
+                    nbytes = src_c.kv_transfer_bytes_fn(req)
+                    n_layers = src_c.model_cfg.num_layers
+                    gran = self.cfg.kv_transfer_granularity
+            elif prev_stage.kind in (rq.RAG_RETRIEVE, rq.RAG_EMBED):
+                nbytes = req.rag_tokens * 2.0 * 4  # context ids+embeddings
+            elif prev_stage.kind == rq.KV_RETRIEVAL:
+                nbytes = 0.0  # priced inside the retrieval stage itself
+        arrive = self.network.transfer(src, dst_client.name, nbytes, now,
+                                       granularity=gran, n_layers=n_layers)
+        self.metrics.comm_events += 1
+        self.metrics.comm_bytes += nbytes
+        st = req.current_stage
+        st.client = dst_client.name
+        st.dispatch_time = arrive
+        st.start_time = arrive
+        self.queue.push(arrive, ev.TRANSFER_DONE, (req, dst_client.name))
+
+    # ------------------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> MetricsCollector:
+        """Algorithm 1 main loop."""
+        horizon = until or self.cfg.max_sim_time
+        while len(self.queue):
+            if self.queue.peek_time() > horizon:
+                break
+            event = self.queue.pop()
+            now = event.time
+            kind = event.kind
+
+            if kind == ev.REQUEST_ARRIVAL:
+                self._dispatch(event.payload, now)
+
+            elif kind == ev.TRANSFER_DONE:
+                req, dst = event.payload
+                client = self.clients.get(dst)
+                if client is None or client.failed:
+                    self._dispatch(req, now)   # destination died in flight
+                else:
+                    client.add(req)
+                    self._kick(client, now)
+
+            elif kind == ev.CLIENT_STEP_DONE:
+                name, step = event.payload
+                client = self.clients.get(name)
+                if client is None or self._active_step.get(name) is not step:
+                    continue  # stale (failed/removed client)
+                del self._active_step[name]
+                if client.failed:
+                    continue
+                finished = client.finish_step(step, now)
+                for req in finished:
+                    req.advance_stage(now)
+                    if req.done:
+                        self.metrics.complete(req)
+                    else:
+                        self._transfer_and_forward(req, name, now)
+                self._maybe_rescue_stragglers(now)
+                self._kick(client, now)
+
+            elif kind == ev.CLIENT_FAIL:
+                self._on_fail(event.payload, now)
+
+            elif kind == ev.CLIENT_RECOVER:
+                c = self.clients.get(event.payload)
+                if c is not None:
+                    c.failed = False
+                    self._kick(c, now)
+
+            elif kind == ev.CLIENT_ADD:
+                c: Client = event.payload
+                self.clients[c.name] = c
+                self._kick(c, now)
+
+            elif kind == ev.CLIENT_REMOVE:
+                self._on_remove(event.payload, now)
+
+        return self.metrics
+
+    # ------------------------------------------------------------------
+    def _on_fail(self, name: str, now: float):
+        client = self.clients.get(name)
+        if client is None:
+            return
+        client.failed = True
+        self._active_step.pop(name, None)      # in-flight step is lost
+        for req in client.drain():             # checkpoint/restart semantics:
+            # the stage restarts on another client; decoded tokens already
+            # streamed to the user are kept.
+            self._dispatch(req, now)
+
+    def _on_remove(self, name: str, now: float):
+        client = self.clients.pop(name, None)
+        if client is None:
+            return
+        self._active_step.pop(name, None)
+        for req in client.drain():
+            self._dispatch(req, now)
+
+    def _maybe_rescue_stragglers(self, now: float):
+        """Hedged re-dispatch: requests queued past the deadline at a client
+        that has not started them are re-routed (straggler mitigation)."""
+        ddl = self.cfg.straggler_deadline
+        if ddl is None:
+            return
+        for client in list(self.clients.values()):
+            sched = client.scheduler
+            waiting = getattr(sched, "waiting", [])
+            stale = [r for r in waiting
+                     if now - self._dispatch_times.get(r.rid, now) > ddl]
+            for r in stale:
+                cands = self._candidates(r) or []
+                others = [c for c in cands if c is not client]
+                if not others:
+                    continue
+                waiting.remove(r)
+                sched.admitted_bytes.pop(r.rid, None) if hasattr(
+                    sched, "admitted_bytes") else None
+                r.preemptions += 1
+                self._dispatch(r, now)
+
+    # ------------------------------------------------------------------
+    @property
+    def total_energy(self) -> float:
+        return sum(c.total_energy for c in self.clients.values())
+
+    def all_serviced(self) -> bool:
+        return len(self.metrics.serviced) >= self._accepted

@@ -1,0 +1,321 @@
+"""vLLM-style LLM scheduler with the paper's five batching strategies
+(§III-D1): static, continuous, chunked, mixed, disaggregated (prefill_only /
+decode_only halves), plus FCFS / least-work-left packing and KV-memory
+admission control with preemption.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.memory import MemoryManager
+from repro.core.request import Request
+from repro.perfmodel import analytical as ana
+from repro.perfmodel.hardware import ClusterSpec
+
+STRATEGIES = ("static", "continuous", "chunked", "mixed",
+              "prefill_only", "decode_only")
+
+
+@dataclass(frozen=True)
+class SchedulerLimits:
+    max_batch: int = 64
+    max_prefill_tokens: int = 8192     # prefill token budget per step
+    chunk_size: int = 512              # chunked-batching token budget
+
+
+@dataclass
+class LLMStep:
+    kind: str                          # "prefill" | "decode" | "chunked"
+    prefill: List[Tuple[Request, int]] = field(default_factory=list)  # (req, tokens)
+    decode: List[Request] = field(default_factory=list)
+    duration: float = 0.0
+    energy: float = 0.0
+    flops: float = 0.0
+
+    @property
+    def n_tokens(self) -> int:
+        pre = sum(t for _, t in self.prefill)
+        dec = sum(r.branches for r in self.decode)
+        return pre + dec
+
+
+class ClientPerf:
+    """Runtime predictor for a client: fitted regression with analytical
+    fallback (paper §III-E1)."""
+
+    def __init__(self, model_cfg: ModelConfig, cluster: ClusterSpec,
+                 use_regression: bool = True):
+        self.cfg = model_cfg
+        self.cluster = cluster
+        self.decode_model = None
+        self.prefill_model = None
+        if use_regression:
+            from repro.perfmodel import regression as reg
+            self.decode_model = reg.fit_decode_model(model_cfg, cluster)
+            self.prefill_model = reg.fit_prefill_model(model_cfg, cluster)
+
+    def prefill(self, tokens: int, batch: int, past: int = 0) -> ana.StageCost:
+        c = ana.prefill_time(self.cfg, self.cluster, tokens, batch, past)
+        if self.prefill_model is not None:
+            t = float(self.prefill_model.predict([past], [tokens], [batch])[0])
+            if t > 0:
+                return ana.StageCost(t, c.energy * t / max(c.time, 1e-12),
+                                     c.flops, c.bytes, c.bound)
+        return c
+
+    def decode(self, batch: int, avg_ctx: int) -> ana.StageCost:
+        c = ana.decode_step_time(self.cfg, self.cluster, batch, avg_ctx)
+        if self.decode_model is not None:
+            t = float(self.decode_model.predict([batch], [avg_ctx])[0])
+            if t > 0:
+                return ana.StageCost(t, c.energy * t / max(c.time, 1e-12),
+                                     c.flops, c.bytes, c.bound)
+        return c
+
+    def chunked(self, chunk_tokens: int, decode_batch: int,
+                avg_ctx: int) -> ana.StageCost:
+        return ana.chunked_step_time(self.cfg, self.cluster, chunk_tokens,
+                                     decode_batch, avg_ctx)
+
+
+class LLMScheduler:
+    def __init__(self, strategy: str, model_cfg: ModelConfig,
+                 cluster: ClusterSpec, perf: Optional[ClientPerf] = None,
+                 limits: SchedulerLimits = SchedulerLimits(),
+                 packing: str = "fcfs"):
+        assert strategy in STRATEGIES, strategy
+        self.strategy = strategy
+        self.cfg = model_cfg
+        self.cluster = cluster
+        self.perf = perf or ClientPerf(model_cfg, cluster, use_regression=False)
+        self.limits = limits
+        self.packing = packing
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.chunk_progress: Dict[int, int] = {}   # rid -> prefilled tokens
+        self.static_batch: List[Request] = []
+        self.admitted_bytes: Dict[int, float] = {}  # rid -> KV bytes held
+        weights = model_cfg.param_count() * ana.BYTES_PER_PARAM / cluster.tp
+        self.memory = MemoryManager(
+            capacity=max(cluster.total_mem - weights * cluster.n_chips / max(
+                1, cluster.tp) * cluster.tp, cluster.total_mem * 0.15))
+        self.kv_per_token = ana.kv_bytes_per_token(model_cfg) + (
+            ana.ssm_state_bytes(model_cfg) / 4096.0)
+        # scheduler-level metrics (paper §III-F2)
+        self.history: List[Dict] = []
+        self.total_energy = 0.0
+        self.total_tokens = 0
+
+    # ------------------------------------------------------------------
+    def add(self, req: Request):
+        if self.strategy == "decode_only":
+            # KV produced by the prefill client arrives with the request
+            nbytes = req.total_context * self.kv_per_token
+            self.memory.admit(nbytes)
+            self.admitted_bytes[req.rid] = nbytes
+            if req.decoded_tokens == 0:
+                req.decoded_tokens = 1   # disagg prefill emitted token #1
+            self.running.append(req)
+        else:
+            self.waiting.append(req)
+        if self.packing == "least_work":
+            self.waiting.sort(key=lambda r: r.effective_prefill_tokens
+                              + r.remaining_tokens)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running or self.static_batch)
+
+    # ------------------------------------------------------------------
+    def _admit_prefills(self, token_budget: int, batch_budget: int
+                        ) -> List[Tuple[Request, int]]:
+        """Admit whole-request prefills under budgets + memory."""
+        out = []
+        used = 0
+        while self.waiting and len(out) < batch_budget:
+            r = self.waiting[0]
+            toks = r.effective_prefill_tokens
+            if out and used + toks > token_budget:
+                break
+            kv = (r.input_tokens + r.rag_tokens) * self.kv_per_token
+            if not self.memory.admit(kv):
+                break
+            self.admitted_bytes[r.rid] = kv
+            self.waiting.pop(0)
+            out.append((r, toks))
+            used += toks
+        return out
+
+    def plan_step(self) -> Optional[LLMStep]:
+        s = self.strategy
+        if s in ("continuous", "prefill_only", "mixed"):
+            return self._plan_continuous(mixed=(s == "mixed"),
+                                         prefill_only=(s == "prefill_only"))
+        if s == "decode_only":
+            return self._plan_decode_only()
+        if s == "chunked":
+            return self._plan_chunked()
+        if s == "static":
+            return self._plan_static()
+        raise ValueError(s)
+
+    # --- continuous / mixed / prefill-only ----------------------------
+    def _plan_continuous(self, mixed: bool, prefill_only: bool) -> Optional[LLMStep]:
+        pre = self._admit_prefills(self.limits.max_prefill_tokens,
+                                   self.limits.max_batch)
+        if pre:
+            step = LLMStep("prefill", prefill=pre)
+            toks = sum(t for _, t in pre)
+            cost = self.perf.prefill(toks, 1)
+            if mixed and self.running:
+                dec = self.running[: self.limits.max_batch]
+                step.decode = dec
+                cost2 = self.perf.chunked(toks, sum(r.branches for r in dec),
+                                          self._avg_ctx(dec))
+                step.duration, step.energy, step.flops = (cost2.time,
+                                                          cost2.energy, cost2.flops)
+            else:
+                step.duration, step.energy, step.flops = (cost.time, cost.energy,
+                                                          cost.flops)
+            return step
+        if prefill_only or not self.running:
+            return None
+        dec = self.running[: self.limits.max_batch]
+        cost = self.perf.decode(sum(r.branches for r in dec), self._avg_ctx(dec))
+        return LLMStep("decode", decode=dec, duration=cost.time,
+                       energy=cost.energy, flops=cost.flops)
+
+    # --- pure decode (disaggregated decode client) ---------------------
+    def _plan_decode_only(self) -> Optional[LLMStep]:
+        if not self.running:
+            return None
+        dec = self.running[: self.limits.max_batch]
+        cost = self.perf.decode(sum(r.branches for r in dec), self._avg_ctx(dec))
+        return LLMStep("decode", decode=dec, duration=cost.time,
+                       energy=cost.energy, flops=cost.flops)
+
+    # --- chunked (Sarathi) ---------------------------------------------
+    def _plan_chunked(self) -> Optional[LLMStep]:
+        dec = self.running[: self.limits.max_batch]
+        budget = self.limits.chunk_size - sum(r.branches for r in dec)
+        pre: List[Tuple[Request, int]] = []
+        while budget > 0 and self.waiting:
+            r = self.waiting[0]
+            done = self.chunk_progress.get(r.rid, 0)
+            if done == 0:
+                kv = (r.input_tokens + r.rag_tokens) * self.kv_per_token
+                if not self.memory.admit(kv):
+                    break
+                self.admitted_bytes[r.rid] = kv
+            remaining = r.effective_prefill_tokens - done
+            take = min(remaining, budget)
+            pre.append((r, take))
+            self.chunk_progress[r.rid] = done + take
+            budget -= take
+            if done + take >= r.effective_prefill_tokens:
+                self.waiting.pop(0)
+            else:
+                break  # head-of-line request still prefilling
+        if not pre and not dec:
+            return None
+        toks = sum(t for _, t in pre)
+        cost = self.perf.chunked(toks, sum(r.branches for r in dec),
+                                 self._avg_ctx(dec) if dec else 0)
+        return LLMStep("chunked", prefill=pre, decode=dec, duration=cost.time,
+                       energy=cost.energy, flops=cost.flops)
+
+    # --- static (FasterTransformers) ------------------------------------
+    def _plan_static(self) -> Optional[LLMStep]:
+        if not self.static_batch:
+            pre = self._admit_prefills(10 ** 12, self.limits.max_batch)
+            if not pre:
+                return None
+            self.static_batch = [r for r, _ in pre]
+            toks = sum(t for _, t in pre)
+            cost = self.perf.prefill(toks, 1)
+            return LLMStep("prefill", prefill=pre, duration=cost.time,
+                           energy=cost.energy, flops=cost.flops)
+        live = [r for r in self.static_batch if r.remaining_tokens > 0]
+        if not live:
+            return None
+        cost = self.perf.decode(sum(r.branches for r in live), self._avg_ctx(live))
+        return LLMStep("decode", decode=live, duration=cost.time,
+                       energy=cost.energy, flops=cost.flops)
+
+    # ------------------------------------------------------------------
+    def _avg_ctx(self, reqs: List[Request]) -> int:
+        if not reqs:
+            return 0
+        return int(sum(r.total_context for r in reqs) / len(reqs))
+
+    # ------------------------------------------------------------------
+    def finish_step(self, step: LLMStep, now: float) -> List[Request]:
+        """Apply step effects; returns requests whose LLM stage completed."""
+        finished: List[Request] = []
+        self.total_energy += step.energy
+        for r, toks in step.prefill:
+            r.prefilled_tokens += toks
+            if r.prefilled_tokens >= r.effective_prefill_tokens:
+                self.chunk_progress.pop(r.rid, None)
+                # prefill emits the first output token
+                if r.decoded_tokens == 0:
+                    r.decoded_tokens = 1
+                    r.first_token_time = now
+                    r.last_token_time = now
+                    r.token_times.append(now)
+                    self.total_tokens += 1
+                if self.strategy == "prefill_only":
+                    finished.append(r)  # hand off to the decode client
+                elif r.remaining_tokens <= 0:
+                    finished.append(r)
+                    self._release(r)
+                elif self.strategy != "static":
+                    self.running.append(r)
+        for r in step.decode:
+            if r.remaining_tokens <= 0:
+                continue
+            r.decoded_tokens += 1
+            if r.first_token_time is None:
+                r.first_token_time = now
+            r.last_token_time = now
+            r.token_times.append(now)
+            self.total_tokens += r.branches
+            self.memory.grow(self.kv_per_token * r.branches)
+            self.admitted_bytes[r.rid] = self.admitted_bytes.get(r.rid, 0.0) \
+                + self.kv_per_token * r.branches
+            if r.remaining_tokens <= 0 and self.strategy != "static":
+                finished.append(r)
+                self._release(r)
+                self.running.remove(r)
+        if self.strategy == "static" and self.static_batch and \
+                all(r.remaining_tokens <= 0 for r in self.static_batch):
+            for r in self.static_batch:
+                finished.append(r)
+                self._release(r)
+            self.static_batch = []
+        self.history.append({
+            "time": now, "queue": len(self.waiting), "running": len(self.running),
+            "mem_used": self.memory.used, "step_tokens": step.n_tokens,
+            "kind": step.kind,
+        })
+        return finished
+
+    def _release(self, r: Request):
+        self.memory.release(self.admitted_bytes.pop(r.rid, 0.0))
+
+    # --- fault tolerance ------------------------------------------------
+    def drain(self) -> List[Request]:
+        """Client failure: return every in-flight request for re-dispatch.
+        KV state is lost; prefill restarts (paper-scale systems re-prefill)."""
+        out = list(self.waiting) + list(self.running) + list(self.static_batch)
+        for r in out:
+            r.prefilled_tokens = 0
+            if r.decoded_tokens > 1:
+                r.decoded_tokens = max(1, r.decoded_tokens)  # keep emitted tokens
+            r.failures += 1
+        self.waiting, self.running, self.static_batch = [], [], []
+        self.chunk_progress.clear()
+        self.admitted_bytes.clear()
+        self.memory.used = 0.0
+        return out

@@ -1,0 +1,68 @@
+"""Multi-level KV-cache retrieval hierarchy (paper §III-E3, Eq. 1).
+
+    f(KV, C_n) = Hit_n * (T_lookup_n + Size_KV / BW_n)
+               + (1 - Hit_n) * f(KV, C_{n+1})
+
+A miss below the last level falls back to ``miss_cost`` — typically prefill
+recomputation (priced by the analytical model) or a DCN fetch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.perfmodel.hardware import CacheTierSpec
+
+
+def expected_retrieval_latency(size_bytes: float,
+                               tiers: Sequence[CacheTierSpec],
+                               miss_cost: float) -> float:
+    """Paper Eq. 1, evaluated recursively (expected value)."""
+    if not tiers:
+        return miss_cost
+    t = tiers[0]
+    hit_time = t.lookup_latency + size_bytes / t.bandwidth
+    return t.hit_rate * hit_time + (1.0 - t.hit_rate) * expected_retrieval_latency(
+        size_bytes, tiers[1:], miss_cost)
+
+
+def sample_retrieval_latency(size_bytes: float, tiers: Sequence[CacheTierSpec],
+                             miss_cost: float, rng: np.random.Generator) -> float:
+    """Monte-Carlo variant for latency-CDF studies (paper Fig. 15)."""
+    lat = 0.0
+    for t in tiers:
+        lat += t.lookup_latency
+        if rng.random() < t.hit_rate:
+            return lat + size_bytes / t.bandwidth
+    return lat + miss_cost
+
+
+@dataclass
+class MemoryManager:
+    """On-device KV memory for an LLM client (paper §III-D: the scheduler
+    prevents admission when KV memory is insufficient and evicts on
+    completion)."""
+    capacity: float
+    used: float = 0.0
+    peak: float = 0.0
+    admission_failures: int = 0
+
+    def can_admit(self, nbytes: float) -> bool:
+        return self.used + nbytes <= self.capacity
+
+    def admit(self, nbytes: float) -> bool:
+        if not self.can_admit(nbytes):
+            self.admission_failures += 1
+            return False
+        self.used += nbytes
+        self.peak = max(self.peak, self.used)
+        return True
+
+    def grow(self, nbytes: float):
+        self.used += nbytes
+        self.peak = max(self.peak, self.used)
+
+    def release(self, nbytes: float):
+        self.used = max(0.0, self.used - nbytes)

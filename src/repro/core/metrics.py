@@ -1,0 +1,104 @@
+"""Metrics collection (paper §III-F2): request / scheduler / client / global."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import Request
+
+
+def percentile(vals: Sequence[float], p: float) -> float:
+    if not len(vals):
+        return float("nan")
+    return float(np.percentile(np.asarray(vals), p))
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Paper Table II: slowdowns over baseline TTFT/TPOT; all six must hold."""
+    ttft_base: float = 0.250
+    tpot_base: float = 0.025
+    ttft_mult: Dict[int, float] = field(
+        default_factory=lambda: {50: 2.0, 90: 3.0, 99: 6.0})
+    tpot_mult: Dict[int, float] = field(
+        default_factory=lambda: {50: 1.25, 90: 1.5, 99: 5.0})
+
+    def satisfied(self, ttfts: Sequence[float], tpots: Sequence[float]) -> bool:
+        for p, m in self.ttft_mult.items():
+            if percentile(ttfts, p) > self.ttft_base * m:
+                return False
+        for p, m in self.tpot_mult.items():
+            if percentile(tpots, p) > self.tpot_base * m:
+                return False
+        return True
+
+
+class MetricsCollector:
+    def __init__(self):
+        self.serviced: List[Request] = []
+        self.dropped: List[Request] = []
+        self.comm_events: int = 0
+        self.comm_bytes: float = 0.0
+
+    def complete(self, req: Request):
+        self.serviced.append(req)
+
+    def drop(self, req: Request):
+        self.dropped.append(req)
+
+    # ------------------------------------------------------------------
+    @property
+    def ttfts(self) -> List[float]:
+        return [r.ttft for r in self.serviced if r.ttft is not None]
+
+    @property
+    def tpots(self) -> List[float]:
+        return [r.tpot for r in self.serviced
+                if r.tpot is not None and r.decoded_tokens > 1]
+
+    @property
+    def e2es(self) -> List[float]:
+        return [r.e2e for r in self.serviced if r.e2e is not None]
+
+    def total_tokens(self) -> int:
+        return sum(r.decoded_tokens * r.branches for r in self.serviced)
+
+    def throughput(self, horizon: float) -> float:
+        return self.total_tokens() / max(horizon, 1e-9)
+
+    def goodput(self, slo: SLO, horizon: float) -> float:
+        """Tokens/sec from requests individually meeting TTFT-P50&TPOT-P50."""
+        ok = [r for r in self.serviced
+              if (r.ttft or 1e9) <= slo.ttft_base * slo.ttft_mult[50]
+              and (r.tpot if r.tpot is not None else 0.0)
+              <= slo.tpot_base * slo.tpot_mult[50]]
+        return sum(r.decoded_tokens * r.branches for r in ok) / max(horizon, 1e-9)
+
+    def summary(self, horizon: Optional[float] = None,
+                total_energy: float = 0.0, slo: Optional[SLO] = None) -> Dict:
+        horizon = horizon or (max(self.e2es, default=0.0) + 1e-9)
+        s = {
+            "n_serviced": len(self.serviced),
+            "n_dropped": len(self.dropped),
+            "tokens": self.total_tokens(),
+            "throughput_tok_s": self.throughput(horizon),
+            "ttft_mean": float(np.mean(self.ttfts)) if self.ttfts else float("nan"),
+            "tpot_mean": float(np.mean(self.tpots)) if self.tpots else float("nan"),
+            "e2e_mean": float(np.mean(self.e2es)) if self.e2es else float("nan"),
+        }
+        for p in (50, 90, 99):
+            s[f"ttft_p{p}"] = percentile(self.ttfts, p)
+            s[f"tpot_p{p}"] = percentile(self.tpots, p)
+            s[f"e2e_p{p}"] = percentile(self.e2es, p)
+        if total_energy > 0:
+            s["energy_j"] = total_energy
+            s["tok_per_joule"] = s["tokens"] / total_energy
+        if slo is not None:
+            s["slo_ok"] = self.slo_satisfied(slo)
+            s["goodput_tok_s"] = self.goodput(slo, horizon)
+        return s
+
+    def slo_satisfied(self, slo: SLO) -> bool:
+        return slo.satisfied(self.ttfts, self.tpots)

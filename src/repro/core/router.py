@@ -1,0 +1,76 @@
+"""Routing & load balancing (paper §III-B1): Round-Robin, Load-based and
+Heavy-Light split, each parameterizable by 4 load metrics (input len, output
+len, KV size, tokens remaining) — the paper's "up to nine distinct routing
+strategies". Modular: subclass Router and register.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional
+
+from repro.core.client import Client
+from repro.core.request import Request
+
+LOAD_METRICS = ("queue", "input_len", "output_len", "kv_size",
+                "tokens_remaining")
+
+
+class Router:
+    name = "base"
+
+    def route(self, req: Request, candidates: List[Client], now: float) -> Client:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._counters: Dict[str, itertools.count] = {}
+
+    def route(self, req, candidates, now):
+        key = req.current_stage.kind
+        c = self._counters.setdefault(key, itertools.count())
+        return candidates[next(c) % len(candidates)]
+
+
+class LoadBasedRouter(Router):
+    name = "load_based"
+
+    def __init__(self, metric: str = "queue"):
+        assert metric in LOAD_METRICS, metric
+        self.metric = metric
+
+    def route(self, req, candidates, now):
+        return min(candidates, key=lambda c: c.load(self.metric))
+
+
+class HeavyLightRouter(Router):
+    """Heavy-light split [26]: long requests go to a dedicated heavy pool so
+    short interactive requests never queue behind them."""
+
+    name = "heavy_light"
+
+    def __init__(self, threshold_tokens: int = 4096, heavy_frac: float = 0.25,
+                 metric: str = "queue"):
+        self.threshold = threshold_tokens
+        self.heavy_frac = heavy_frac
+        self.metric = metric
+
+    def route(self, req, candidates, now):
+        n_heavy = max(1, int(len(candidates) * self.heavy_frac))
+        heavy, light = candidates[:n_heavy], candidates[n_heavy:] or candidates
+        work = req.input_tokens + req.output_tokens * req.branches
+        pool = heavy if work >= self.threshold else light
+        return min(pool, key=lambda c: c.load(self.metric))
+
+
+def make_router(policy: str = "round_robin", metric: str = "queue",
+                **kw) -> Router:
+    if policy == "round_robin":
+        return RoundRobinRouter()
+    if policy == "load_based":
+        return LoadBasedRouter(metric)
+    if policy == "heavy_light":
+        return HeavyLightRouter(metric=metric, **kw)
+    raise ValueError(policy)

@@ -1,0 +1,84 @@
+"""Base schedulers for single-step clients (paper §III-D).
+
+* ``BatchedScheduler`` — tasks with reuse (RAG lookup, KV retrieval): all
+  queued requests run as one batch per step.
+* ``SequentialScheduler`` — no-reuse tasks (padding, truncation, detokenize):
+  available cores drain the queue linearly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.request import Request
+
+
+@dataclass
+class SimpleStep:
+    requests: List[Request]
+    duration: float
+    energy: float = 0.0
+
+
+class BatchedScheduler:
+    def __init__(self, latency_fn: Callable[[List[Request]], float],
+                 max_batch: int = 256, energy_fn=None):
+        self.latency_fn = latency_fn
+        self.energy_fn = energy_fn
+        self.max_batch = max_batch
+        self.waiting: List[Request] = []
+
+    def add(self, req: Request):
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting)
+
+    def plan_step(self) -> Optional[SimpleStep]:
+        if not self.waiting:
+            return None
+        batch = self.waiting[: self.max_batch]
+        self.waiting = self.waiting[self.max_batch:]
+        dur = self.latency_fn(batch)
+        en = self.energy_fn(batch, dur) if self.energy_fn else 0.0
+        return SimpleStep(batch, dur, en)
+
+    def finish_step(self, step: SimpleStep, now: float) -> List[Request]:
+        return step.requests
+
+    def drain(self) -> List[Request]:
+        out, self.waiting = self.waiting, []
+        return out
+
+
+class SequentialScheduler:
+    """n_cores parallel lanes, linear within a lane."""
+
+    def __init__(self, per_request_fn: Callable[[Request], float],
+                 n_cores: int = 8, energy_fn=None):
+        self.per_request_fn = per_request_fn
+        self.energy_fn = energy_fn
+        self.n_cores = n_cores
+        self.waiting: List[Request] = []
+
+    def add(self, req: Request):
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting)
+
+    def plan_step(self) -> Optional[SimpleStep]:
+        if not self.waiting:
+            return None
+        batch = self.waiting[: self.n_cores]
+        self.waiting = self.waiting[self.n_cores:]
+        dur = max(self.per_request_fn(r) for r in batch)
+        en = self.energy_fn(batch, dur) if self.energy_fn else 0.0
+        return SimpleStep(batch, dur, en)
+
+    def finish_step(self, step: SimpleStep, now: float) -> List[Request]:
+        return step.requests
+
+    def drain(self) -> List[Request]:
+        out, self.waiting = self.waiting, []
+        return out

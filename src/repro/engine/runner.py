@@ -1,0 +1,146 @@
+"""Real-execution serving engine: HERMES scheduling semantics (continuous
+batching, slot-based KV cache, admission control) driving ACTUAL JAX
+prefill/decode on a model — the e2e serving driver for examples/.
+
+The simulator (repro.core) predicts this engine's behaviour; the fidelity
+benchmark replays the same request schedule through both and compares.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import steps
+from repro.models import transformer as tf
+
+
+@dataclass
+class EngineRequest:
+    rid: int
+    prompt: np.ndarray                       # (p,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    tokens: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def ttft(self):
+        return (self.first_token_time - self.submit_time
+                if self.first_token_time else None)
+
+    @property
+    def tpot(self):
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        return ((self.finish_time - self.first_token_time)
+                / max(1, len(self.tokens) - 1))
+
+
+class Engine:
+    """Continuous-batching engine with fixed decode slots."""
+
+    def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        if params is None:
+            params, _ = tf.init_model(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.caches = tf.init_cache(cfg, max_batch, max_len)
+        self.active = [None] * max_batch        # slot -> EngineRequest
+        self.waiting: List[EngineRequest] = []
+        self.finished: List[EngineRequest] = []
+        self.steps = 0
+
+        @jax.jit
+        def _prefill_one(params, tokens):
+            return steps.prefill_step(params, {"tokens": tokens}, cfg, max_len)
+
+        @jax.jit
+        def _decode(params, tokens, caches):
+            return steps.serve_step(params, tokens, caches, cfg)
+
+        self._prefill_one = _prefill_one
+        self._decode = _decode
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> EngineRequest:
+        r = EngineRequest(rid=len(self.waiting) + len(self.finished)
+                          + sum(a is not None for a in self.active),
+                          prompt=np.asarray(prompt, np.int32),
+                          max_new_tokens=max_new_tokens, eos_id=eos_id,
+                          submit_time=time.monotonic())
+        self.waiting.append(r)
+        return r
+
+    def _write_slot(self, slot: int, req_cache):
+        """Copy a single-request cache into batch slot ``slot``."""
+        def put(full, one):
+            return full.at[:, slot].set(one[:, 0].astype(full.dtype)) \
+                if full.ndim >= 2 else full
+        self.caches = jax.tree.map(put, self.caches, req_cache)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.active[slot] is not None or not self.waiting:
+                continue
+            r = self.waiting.pop(0)
+            logits, cache1 = self._prefill_one(self.params, r.prompt[None, :])
+            tok = int(jnp.argmax(logits, -1)[0])
+            now = time.monotonic()
+            r.first_token_time = now
+            r.tokens.append(tok)
+            r.slot = slot
+            self._write_slot(slot, cache1)
+            self.active[slot] = r
+
+    def _step_decode(self):
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None:
+                last[s, 0] = r.tokens[-1]
+        new_tok, _, self.caches = self._decode(self.params,
+                                               jnp.asarray(last), self.caches)
+        new_tok = np.asarray(new_tok)
+        now = time.monotonic()
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            t = int(new_tok[s])
+            r.tokens.append(t)
+            done = (len(r.tokens) >= r.max_new_tokens
+                    or (r.eos_id is not None and t == r.eos_id)
+                    or len(r.prompt) + len(r.tokens) >= self.max_len - 1)
+            if done:
+                r.finish_time = now
+                self.finished.append(r)
+                self.active[s] = None
+        self.steps += 1
+
+    def run(self, max_steps: int = 100_000) -> List[EngineRequest]:
+        while (self.waiting or any(a is not None for a in self.active)) \
+                and self.steps < max_steps:
+            self._admit()
+            if any(a is not None for a in self.active):
+                self._step_decode()
+        return self.finished
+
+    # --- fault tolerance: preempt & requeue (client-failure analogue) ----
+    def preempt_slot(self, slot: int):
+        r = self.active[slot]
+        if r is None:
+            return
+        r.tokens = r.tokens[:1]           # keep the streamed first token
+        self.active[slot] = None
+        self.waiting.insert(0, r)

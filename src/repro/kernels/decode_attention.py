@@ -1,0 +1,93 @@
+"""Pallas TPU decode-attention kernel (one new token vs. a padded KV cache).
+
+Decode is memory-bound: the kernel streams K/V tiles HBM->VMEM once, keeps the
+(tiny) query tile and the fp32 online-softmax state resident in VMEM, and
+masks by per-request cache length. Grid: (batch, kv_heads, kv_blocks) with the
+kv dimension minor so scratch carries across tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_s: int):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    s_start = si * block_s
+
+    @pl.when(s_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bs, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bs, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        span = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(span < length, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None,
+                     block_s: int = 512, interpret: bool = False):
+    """q: (b, 1, nh, d); k/v_cache: (b, S, kvh, d); lengths: (b,) int32."""
+    b, _, nh, d = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = nh // kvh
+    dv = v_cache.shape[-1]
+    scale = d ** -0.5 if scale is None else scale
+    block_s = min(block_s, S)
+    ns = pl.cdiv(S, block_s)
+
+    qr = q.reshape(b, kvh, g, d)
+    grid = (b, kvh, ns)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, si: (bi,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, block_s, 1, dv), lambda bi, hi, si: (bi, si, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qr, k_cache, v_cache)
+    return out.reshape(b, 1, nh, dv)

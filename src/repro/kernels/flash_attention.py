@@ -1,0 +1,113 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+TPU adaptation of FlashAttention: HBM->VMEM tiling via BlockSpec, online
+softmax with fp32 running max/denominator kept in VMEM scratch across the
+minor (kv) grid dimension, MXU-shaped (128-aligned) tiles. GQA is handled in
+the index_map (q-head h reads kv-head h // group).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv dimension is the
+minor-most so scratch carries across kv steps for a fixed q tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    should_run = True
+    if causal:
+        # skip kv tiles strictly above the causal diagonal
+        should_run = k_start <= q_start + block_q - 1
+
+    @pl.when(should_run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        spans_q = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        spans_k = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = spans_k < seq_k
+        if causal:
+            mask = mask & (spans_k <= spans_q)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (b, s, nh, d), k/v: (b, t, kvh, d). Requires dq == dv."""
+    b, s, nh, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = nh // kvh
+    scale = d ** -0.5 if scale is None else scale
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    nq = pl.cdiv(s, block_q)
+    nk = pl.cdiv(t, block_k)
+
+    grid = (b, nh, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, seq_k=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, nh, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out

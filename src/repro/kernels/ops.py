@@ -1,0 +1,54 @@
+"""jit'd public wrappers around the Pallas kernels with platform dispatch.
+
+On TPU the Pallas kernels run compiled; everywhere else (this CPU container,
+and any shape the kernel does not support, e.g. MLA prefill where dq != dv)
+the pure-jnp reference implements identical semantics. ``FORCE_REF`` /
+``FORCE_INTERPRET`` env knobs exist for tests and benchmarks.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import pq_scan as _pq
+
+
+def _mode() -> str:
+    if os.environ.get("REPRO_KERNELS", "").lower() == "ref":
+        return "ref"
+    if os.environ.get("REPRO_KERNELS", "").lower() == "interpret":
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    mode = _mode()
+    if mode != "ref" and q.shape[-1] == v.shape[-1] and q.shape[-1] % 128 == 0:
+        return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   interpret=(mode == "interpret"))
+    s, t = q.shape[1], k.shape[1]
+    if s * t > 2048 * 2048:
+        bq = 2048 if s <= 8192 else 4096
+        return _ref.chunked_flash_attention(q, k, v, causal=causal,
+                                            scale=scale, block_q=bq, block_k=bq)
+    return _ref.flash_attention(q, k, v, causal=causal, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None):
+    mode = _mode()
+    if mode != "ref" and q.shape[-1] == v_cache.shape[-1] and q.shape[-1] % 128 == 0:
+        return _da.decode_attention(q, k_cache, v_cache, lengths, scale=scale,
+                                    interpret=(mode == "interpret"))
+    return _ref.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
+
+
+def pq_scan(codes, lut):
+    mode = _mode()
+    if mode != "ref":
+        return _pq.pq_scan(codes, lut, interpret=(mode == "interpret"))
+    return _ref.pq_scan(codes, lut)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """GQA-aware softmax attention.
+
+    q: (b, s, nh, dq)  k: (b, t, kvh, dq)  v: (b, t, kvh, dv); nh % kvh == 0.
+    """
+    b, s, nh, dq = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = nh // kvh
+    scale = dq ** -0.5 if scale is None else scale
+    qr = q.reshape(b, s, kvh, g, dq)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]  # (s, t)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, nh, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_flash_attention(q, k, v, *, causal: bool = True,
+                            scale: float | None = None,
+                            block_q: int = 2048, block_k: int = 2048):
+    """Blockwise online-softmax attention in pure jnp (python-unrolled blocks).
+
+    Semantics identical to ``flash_attention``; the working set per step is
+    one (block_q x block_k) score tile instead of the full (s x t) matrix.
+    This is the XLA-lowerable analogue of the Pallas flash kernel and is what
+    the models use for long sequences off-TPU (incl. the dry-run).
+    """
+    b, s, nh, dq = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = nh // kvh
+    dv = v.shape[-1]
+    scale = dq ** -0.5 if scale is None else scale
+    qr = q.reshape(b, s, kvh, g, dq)
+    out_blocks = []
+    for qs in range(0, s, block_q):
+        qe = min(qs + block_q, s)
+        qb = qr[:, qs:qe].astype(jnp.float32)
+        m = jnp.full((b, kvh, g, qe - qs), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kvh, g, qe - qs), jnp.float32)
+        acc = jnp.zeros((b, kvh, g, qe - qs, dv), jnp.float32)
+        for ks in range(0, t, block_k):
+            if causal and ks > qe - 1:
+                break
+            ke = min(ks + block_k, t)
+            kb = k[:, ks:ke].astype(jnp.float32)
+            vb = v[:, ks:ke].astype(jnp.float32)
+            sc = jnp.einsum("bskgh,btkh->bkgst", qb, kb) * scale
+            if causal:
+                mask = (jnp.arange(ks, ke)[None, :]
+                        <= jnp.arange(qs, qe)[:, None])
+                sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgst,btkh->bkgsh", p, vb)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out_blocks.append(jnp.moveaxis(out, 3, 1))          # (b,sq,kvh,g,dv)
+    full = jnp.concatenate(out_blocks, axis=1)
+    return full.reshape(b, s, nh, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None):
+    """One-token decode attention against a padded cache.
+
+    q: (b, 1, nh, dq); k_cache/v_cache: (b, S, kvh, d*); lengths: (b,) number
+    of valid cache entries (mask is ``pos < lengths``).
+    """
+    b, _, nh, dq = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = nh // kvh
+    scale = dq ** -0.5 if scale is None else scale
+    qr = q.reshape(b, kvh, g, dq)
+    # bf16 operands + fp32 accumulation (preferred_element_type): avoids
+    # materializing an fp32 copy of the whole cache (the MXU-native contract)
+    scores = jnp.einsum("bkgh,bSkh->bkgS", qr, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]        # (b, S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgS,bSkh->bkgh", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, nh, v_cache.shape[-1]).astype(q.dtype)
+
+
+def pq_scan(codes, lut):
+    """IVF-PQ asymmetric-distance scan.
+
+    codes: (N, M) uint8/int32 PQ codes; lut: (M, K) per-subquantizer distance
+    table for one query. Returns (N,) float32 total distances.
+    """
+    codes = codes.astype(jnp.int32)
+    gathered = jnp.take_along_axis(lut.astype(jnp.float32).T, codes, axis=0)
+    # lut.T: (K, M); take_along_axis over axis 0 with (N, M) indices -> (N, M)
+    return jnp.sum(gathered, axis=-1)

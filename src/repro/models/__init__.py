@@ -1,0 +1,1 @@
+"""JAX model zoo: unified transformer covering all assigned architectures."""

@@ -1,0 +1,283 @@
+"""Attention: GQA/MQA (rope) and MLA (DeepSeek-V2 latent attention).
+
+Prefill paths are causal (or bidirectional for encoder-only); decode paths
+consume a static-length KV cache with per-request lengths. The inner
+softmax(QK^T)V is routed through ``repro.kernels.ops`` which picks the Pallas
+flash kernel on TPU and the jnp reference elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Initializer, apply_rope, init_norm, apply_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(init: Initializer, path: str, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        p: Dict = {}
+        if m.q_lora_rank:
+            p["wdq"] = init.w(f"{path}.wdq", (d, m.q_lora_rank), ("w_embed", "q_lora"))
+            p["q_norm"] = init_norm(init, f"{path}.q_norm", cfg, m.q_lora_rank)
+            q_in = m.q_lora_rank
+        else:
+            q_in = d
+        p["wuq"] = init.w(
+            f"{path}.wuq",
+            (q_in, cfg.num_heads, m.qk_nope_head_dim + m.qk_rope_head_dim),
+            ("q_lora" if m.q_lora_rank else "w_embed", "heads", "head_dim"),
+        )
+        p["wdkv"] = init.w(f"{path}.wdkv", (d, m.kv_lora_rank), ("w_embed", "kv_lora"))
+        p["wkr"] = init.w(f"{path}.wkr", (d, m.qk_rope_head_dim), ("w_embed", "head_dim"))
+        p["kv_norm"] = init_norm(init, f"{path}.kv_norm", cfg, m.kv_lora_rank)
+        p["wuk"] = init.w(f"{path}.wuk", (m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim),
+                          ("kv_lora", "heads", "head_dim"))
+        p["wuv"] = init.w(f"{path}.wuv", (m.kv_lora_rank, cfg.num_heads, m.v_head_dim),
+                          ("kv_lora", "heads", "head_dim"))
+        p["wo"] = init.z(f"{path}.wo", (cfg.num_heads, m.v_head_dim, d),
+                         ("heads", "head_dim", "w_embed"))
+        return p
+    # GQA / MQA / MHA. Baseline tags head_dim with the "head_dim_shard"
+    # fallback (takes "model" only when heads couldn't). v2 drops it: rope's
+    # rotate-half splits a head_dim-sharded tensor across shards and triggers
+    # involuntary resharding, so v2 replicates the (small) attention weights
+    # and relies on qseq/cache_seq sharding for the compute instead.
+    hd_ax = "head_dim" if cfg.shard_v2 else "head_dim_shard"
+    return {
+        "wq": init.w(f"{path}.wq", (d, cfg.num_heads, hd),
+                     ("w_embed", "heads", hd_ax)),
+        "wk": init.w(f"{path}.wk", (d, cfg.num_kv_heads, hd),
+                     ("w_embed", "kv_heads", hd_ax)),
+        "wv": init.w(f"{path}.wv", (d, cfg.num_kv_heads, hd),
+                     ("w_embed", "kv_heads", hd_ax)),
+        "wo": init.z(f"{path}.wo", (cfg.num_heads, hd, d),
+                     ("heads", hd_ax, "w_embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention (prefill, batched full-sequence)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, causal: bool, scale: float):
+    """q: (b,s,nh,dq) k: (b,s,kvh,dq) v: (b,s,kvh,dv). GQA-aware reference."""
+    from repro.kernels import ops  # lazy: avoids import cycle at module load
+
+    return ops.flash_attention(q, k, v, causal=causal, scale=scale)
+
+
+def _heads_shardable(cfg: ModelConfig, rules) -> bool:
+    if rules is None:
+        return True
+    m = rules.axis_sizes.get("model", 1)
+    return cfg.num_heads % m == 0
+
+
+def _qseq_constrain(q, cfg, rules):
+    """When heads can't shard over 'model', shard the QUERY sequence instead
+    so the O(s*t) score computation still splits across the model axis."""
+    if rules is None or _heads_shardable(cfg, rules) or q.shape[1] == 1:
+        return q
+    from repro.models.sharding import constrain
+    return constrain(q, rules, ("batch", "attn_qseq", None, None))
+
+
+def gqa_prefill(params, x, positions, cfg: ModelConfig,
+                cache: Optional[Dict] = None,
+                rules=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full-sequence attention. If ``cache`` is given (pre-allocated), the
+    computed K/V are written into it (inference prefill)."""
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = _qseq_constrain(q, cfg, rules)
+    out = _sdpa(q, k, v, causal=not cfg.encoder_only, scale=hd ** -0.5)
+    new_cache = None
+    if cache is not None:
+        S = cache["k"].shape[1]
+        s = k.shape[1]
+        pad = [(0, 0), (0, S - s), (0, 0), (0, 0)]
+        new_cache = {
+            "k": jnp.pad(k, pad).astype(cache["k"].dtype),
+            "v": jnp.pad(v, pad).astype(cache["v"].dtype),
+            "length": jnp.full(cache["length"].shape, s, jnp.int32),
+        }
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, new_cache
+
+
+def gqa_decode(params, x, cfg: ModelConfig, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode against a static-length cache.
+
+    x: (b, 1, d); cache k/v: (b, S, kvh, hd); cache["length"]: (b,) current
+    number of valid tokens (the new token is written at that index).
+    """
+    from repro.kernels import ops
+
+    hd = cfg.resolved_head_dim
+    lengths = cache["length"]
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    pos = lengths[:, None]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    def upd(buf, new):
+        def one(b, n, i):
+            return jax.lax.dynamic_update_slice(b, n.astype(b.dtype), (i, 0, 0))
+        return jax.vmap(one)(buf, new, lengths)
+
+    k_cache = upd(cache["k"], k)
+    v_cache = upd(cache["v"], v)
+    out = ops.decode_attention(q, k_cache, v_cache, lengths + 1, scale=hd ** -0.5)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, {"k": k_cache, "v": v_cache, "length": lengths + 1}
+
+
+# ---------------------------------------------------------------------------
+# MLA
+# ---------------------------------------------------------------------------
+
+def _mla_qkv_prefill(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = apply_norm(params["q_norm"], x @ params["wdq"], cfg)
+    else:
+        cq = x
+    q = jnp.einsum("bsd,dnh->bsnh", cq, params["wuq"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = apply_norm(params["kv_norm"], x @ params["wdkv"], cfg)
+    k_rope = apply_rope((x @ params["wkr"])[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_prefill(params, x, positions, cfg: ModelConfig,
+                cache: Optional[Dict] = None,
+                rules=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_prefill(params, x, positions, cfg)
+    k_nope = jnp.einsum("bsl,lnh->bsnh", c_kv, params["wuk"])
+    v = jnp.einsum("bsl,lnh->bsnh", c_kv, params["wuv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q = _qseq_constrain(q, cfg, rules)
+    out = _sdpa(q, k, v, causal=not cfg.encoder_only, scale=scale)
+    new_cache = None
+    if cache is not None:
+        S = cache["c_kv"].shape[1]
+        s = c_kv.shape[1]
+        new_cache = {
+            "c_kv": jnp.pad(c_kv, [(0, 0), (0, S - s), (0, 0)]).astype(cache["c_kv"].dtype),
+            "k_rope": jnp.pad(k_rope[:, :, 0, :], [(0, 0), (0, S - s), (0, 0)]).astype(
+                cache["k_rope"].dtype),
+            "length": jnp.full(cache["length"].shape, s, jnp.int32),
+        }
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, new_cache
+
+
+def mla_decode(params, x, cfg: ModelConfig, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token MLA decode. Baseline path re-expands K/V from the latent
+    cache; ``cfg.mla.absorb`` switches to the absorbed (latent-space) path,
+    which never materializes per-head K/V — the DeepSeek-V2 serving trick."""
+    m = cfg.mla
+    lengths = cache["length"]
+    pos = lengths[:, None]
+    if m.q_lora_rank:
+        cq = apply_norm(params["q_norm"], x @ params["wdq"], cfg)
+    else:
+        cq = x
+    q = jnp.einsum("bsd,dnh->bsnh", cq, params["wuq"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    c_kv_new = apply_norm(params["kv_norm"], x @ params["wdkv"], cfg)  # (b,1,l)
+    k_rope_new = apply_rope((x @ params["wkr"])[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+
+    def upd(buf, new):
+        def one(b, n, i):
+            return jax.lax.dynamic_update_slice(b, n.astype(b.dtype), (i, 0))
+        return jax.vmap(one)(buf, new, lengths)
+
+    c_kv = upd(cache["c_kv"], c_kv_new)          # (b,S,l)
+    k_rope = upd(cache["k_rope"], k_rope_new)    # (b,S,r)
+    S = c_kv.shape[1]
+    valid = jnp.arange(S)[None, :] < (lengths + 1)[:, None]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    if m.absorb:
+        # q_nope -> latent space: (b,1,n,h) x (l,n,h) -> (b,1,n,l)
+        q_lat = jnp.einsum("bsnh,lnh->bsnl", q_nope, params["wuk"])
+        scores = (jnp.einsum("bsnl,bSl->bnS", q_lat, c_kv)
+                  + jnp.einsum("bsnh,bSh->bnS", q_rope, k_rope)) * scale
+        scores = jnp.where(valid[:, None, :], scores.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+        o_lat = jnp.einsum("bnS,bSl->bnl", probs, c_kv)
+        out = jnp.einsum("bnl,lnh->bnh", o_lat, params["wuv"])[:, None]
+    else:
+        k_nope = jnp.einsum("bSl,lnh->bSnh", c_kv, params["wuk"])
+        v = jnp.einsum("bSl,lnh->bSnh", c_kv, params["wuv"])
+        scores = (jnp.einsum("bsnh,bSnh->bnS", q_nope, k_nope)
+                  + jnp.einsum("bsnh,bSh->bnS", q_rope, k_rope)) * scale
+        scores = jnp.where(valid[:, None, :], scores.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bnS,bSnh->bnh", probs, v)[:, None]
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "length": lengths + 1}
+
+
+# ---------------------------------------------------------------------------
+# cache factories (shapes only; used for both allocation and ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Abstract KV-cache entry for ONE attention layer."""
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_head_dim), dtype),
+            "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig, seq_sharded: bool = False):
+    seq_ax = "cache_seq" if cfg.shard_v2 else "seq"
+    if cfg.attn_type == "mla":
+        return {
+            "c_kv": ("batch", seq_ax, "kv_lora"),
+            "k_rope": ("batch", seq_ax, None),
+            "length": ("batch",),
+        }
+    hd_ax = None if cfg.shard_v2 else "head_dim_shard"
+    return {
+        "k": ("batch", seq_ax, "kv_heads", hd_ax),
+        "v": ("batch", seq_ax, "kv_heads", hd_ax),
+        "length": ("batch",),
+    }

@@ -1,0 +1,197 @@
+"""Mamba2 (SSD) block: chunked parallel scan for train/prefill, O(1)-state
+recurrent step for decode. Follows the SSD formulation of Mamba2 (scalar
+per-head decay, grouped B/C with ngroups=1).
+
+Chunking keeps prefill sub-quadratic: within-chunk quadratic term + an
+inter-chunk recurrent state (b, heads, state, head_dim) carried by lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Initializer, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.state_dim, s.head_dim, s.conv_width
+
+
+def init_mamba2(init: Initializer, path: str, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_in, nh, n, hd, cw = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    import numpy as np
+    return {
+        "in_proj": init.w(f"{path}.in_proj", (d, 2 * d_in + 2 * n + nh),
+                          ("w_embed", "ssm_inner")),
+        "conv_w": init.w(f"{path}.conv_w", (cw, conv_dim), ("conv", "ssm_inner"),
+                         scale=1.0 / cw),
+        "conv_b": init.z(f"{path}.conv_b", (conv_dim,), ("ssm_inner",)),
+        "A_log": init.const(f"{path}.A_log", np.zeros((nh,)), ("ssm_heads",)),
+        "D": init.ones(f"{path}.D", (nh,), ("ssm_heads",)),
+        "dt_bias": init.z(f"{path}.dt_bias", (nh,), ("ssm_heads",)),
+        "norm": init.z(f"{path}.norm", (d_in,), ("ssm_inner",)),
+        "out_proj": init.z(f"{path}.out_proj", (d_in, d), ("ssm_inner", "w_embed")),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_in, nh, n, hd, _ = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt = zxbcdt[..., d_in + d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv. xbc: (b, l, C); conv_w: (w, C).
+
+    If conv_state (b, w-1, C) is given (decode), prepend it; returns also the
+    new conv state."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * conv_w[i][None, None] for i in range(w))
+    out = jax.nn.silu(out + conv_b[None, None])
+    new_state = xp[:, -(w - 1):, :]
+    return out, new_state
+
+
+def _ssd_chunked(xh, dt, B, C, A, chunk: int):
+    """SSD core.
+
+    xh: (b, l, h, p); dt: (b, l, h) (post-softplus); B, C: (b, l, n);
+    A: (h,) negative. Returns (y (b,l,h,p), final_state (b,h,n,p)).
+    """
+    b, l, h, p = xh.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    r = lambda t: t.reshape(b, c, chunk, *t.shape[2:])
+    xh, dt, B, C = r(xh), r(dt), r(B), r(C)
+
+    la = dt * A[None, None, None]                        # (b,c,q,h) log-decay <= 0
+    cum = jnp.cumsum(la, axis=2)                         # inclusive cumsum
+    # intra-chunk: M[t,s] = C_t.B_s * exp(cum_t - cum_s) * dt_s   (s <= t)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,c,t,s,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: masked (s > t) entries are positive and overflow exp,
+    # which would poison gradients through the where.
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bctn,bcsn->bcts", C, B)
+    y_intra = jnp.einsum("bcts,bctsh,bcsh,bcshp->bcthp",
+                         cb.astype(jnp.float32), decay,
+                         dt.astype(jnp.float32), xh.astype(jnp.float32))
+
+    # chunk summary states: S_c = sum_s exp(cum_Q - cum_s) dt_s B_s (x) x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)              # (b,c,q,h)
+    S = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchnp",
+                   tail, dt.astype(jnp.float32), B.astype(jnp.float32),
+                   xh.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (b,c,h)
+
+    def scan_fn(carry, inp):
+        S_c, dec = inp
+        new = carry * dec[..., None, None] + S_c
+        return new, carry                                 # emit state BEFORE chunk
+
+    init_state = jnp.zeros((b, h, n, p), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init_state,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b,c,h,n,p)
+
+    y_inter = jnp.einsum("bctn,bcth,bchnp->bcthp",
+                         C.astype(jnp.float32), jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, final
+
+
+def mamba2_forward(params, x, cfg: ModelConfig,
+                   return_state: bool = False):
+    """x: (b, l, d) -> (y (b, l, d), state dict or None)."""
+    d_in, nh, n, hd, cw = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :d_in]
+    B = xbc[..., d_in:d_in + n]
+    C = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:2], nh, hd)
+    y, final = _ssd_chunked(xh, dt, B, C, A, cfg.ssm.chunk_size)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    state = None
+    if return_state:
+        state = {"conv": conv_state, "ssm": final.astype(jnp.float32)}
+    return out, state
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, state: Dict):
+    """One-token step. x: (b, 1, d); state: conv (b, w-1, C), ssm (b,h,n,p)."""
+    d_in, nh, n, hd, cw = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   conv_state=state["conv"])
+    xs = xbc[..., :d_in]
+    B = xbc[..., d_in:d_in + n]
+    C = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(xs.shape[0], 1, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :] * A[None])               # (b,h)
+    contrib = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0, :],
+                         B[:, 0].astype(jnp.float32), xh[:, 0])
+    ssm = state["ssm"] * decay[..., None, None] + contrib
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), ssm)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh[:, 0]
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_state, "ssm": ssm}
+
+
+def mamba2_state_spec(cfg: ModelConfig, batch: int):
+    d_in, nh, n, hd, cw = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cw - 1, conv_dim), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((batch, nh, n, hd), jnp.float32),
+    }
+
+
+def mamba2_state_axes():
+    return {"conv": ("batch", None, "ssm_inner"),
+            "ssm": ("batch", "ssm_heads", None, None)}
+
+
+def mamba2_reference(params, x, cfg: ModelConfig):
+    """Naive token-by-token recurrence (oracle for tests)."""
+    d_in, nh, n, hd, cw = _dims(cfg)
+    b, l, _ = x.shape
+    state = {"conv": jnp.zeros((b, cw - 1, d_in + 2 * n), jnp.float32),
+             "ssm": jnp.zeros((b, nh, n, hd), jnp.float32)}
+    outs = []
+    for t in range(l):
+        o, state = mamba2_decode(params, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

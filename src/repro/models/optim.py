@@ -1,0 +1,62 @@
+"""Minimal AdamW + LR schedules (no external deps)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(opt: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = opt.lr * (step + 1) / max(1, opt.warmup_steps)
+    t = jnp.clip((step - opt.warmup_steps)
+                 / max(1, opt.total_steps - opt.warmup_steps), 0.0, 1.0)
+    cos = opt.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict:
+    zeros = lambda p: jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(params, grads, opt_state, opt: OptConfig):
+    step = opt_state["step"] + 1
+    lr = lr_at(opt, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = opt.b1 * m + (1 - opt.b1) * g
+        v = opt.b2 * v + (1 - opt.b2) * jnp.square(g)
+        mhat = m / (1 - opt.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - opt.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

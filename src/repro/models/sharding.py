@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules -> concrete PartitionSpecs.
+
+Every parameter / activation dimension is tagged with a *logical* axis name at
+creation time (see ``layers.Initializer``). This module resolves logical axes
+to mesh axes with divisibility-aware fallbacks, so the same model code shards
+correctly on the single-pod (16,16) and multi-pod (2,16,16) production meshes
+as well as on a 1-device CPU mesh for smoke tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Ordered fallback chains: the first mesh-axis group that (a) exists in the
+# mesh and (b) evenly divides the dimension wins. ``None`` => replicate.
+# "fsdp" is a virtual mesh-axis group resolved to the data-parallel axes when
+# FSDP weight sharding is enabled (large archs / training).
+LOGICAL_RULES: Dict[str, Sequence[Optional[Tuple[str, ...]]]] = {
+    # activations
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (None,),                      # seq replicated by default
+    "seq_shard": (("pod", "data"), ("data",)),  # long-context: shard sequence
+    "embed": (None,),
+    "act_ff": (("model",),),
+    "act_heads": (("model",),),
+    # weights
+    "w_embed": (None,),                  # overridden to dp axes under FSDP
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (None,),
+    # fallback: if the heads dim could not take "model" (not divisible), the
+    # taken-set is free and head_dim takes it instead (MQA / small-head archs)
+    "head_dim_shard": (("model",),),
+    "ff": (("model",),),
+    "vocab": (("model",),),
+    "experts": (("model",),),
+    "kv_lora": (("model",),),
+    "q_lora": (("model",),),
+    "ssm_inner": (("model",),),
+    "ssm_heads": (("model",),),
+    "attn_qseq": (("model",),),          # seq-sharded attention fallback
+    # v2 KV-cache layout: grab every free axis for the cache sequence dim
+    "cache_seq": (("pod", "data", "model"), ("data", "model"), ("model",), None),
+    "state": (None,),
+    "conv": (None,),
+    "scan": (None,),                     # stacked-layer leading dim
+    "norm": (None,),
+}
+
+
+class ShardingRules:
+    """Resolves logical axes against a mesh (+ optional FSDP override)."""
+
+    def __init__(self, mesh: Mesh, fsdp: bool = False, seq_sharded: bool = False):
+        self.mesh = mesh
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.rules = dict(LOGICAL_RULES)
+        if fsdp:
+            # ZeRO-3 style: shard the d_model dim of weights over the DP axes.
+            self.rules["w_embed"] = (("pod", "data"), ("data",), None)
+        if seq_sharded:
+            # long-context single-request: batch cannot shard; shard seq.
+            self.rules["seq"] = (("pod", "data"), ("data",), None)
+            self.rules["batch"] = (None,)
+
+    def _axis_group_size(self, group: Tuple[str, ...]) -> int:
+        return math.prod(self.axis_sizes[a] for a in group)
+
+    def _resolve_axis(self, logical: Optional[str], dim: int, taken: set):
+        if logical is None:
+            return None
+        for group in self.rules.get(logical, (None,)):
+            if group is None:
+                return None
+            if not all(a in self.axis_sizes for a in group):
+                continue
+            if any(a in taken for a in group):
+                continue
+            if dim % self._axis_group_size(group) != 0:
+                continue
+            return group if len(group) > 1 else group[0]
+        return None
+
+    # primary TP dims claim the mesh axis before fallback dims get a chance,
+    # regardless of their position in the shape
+    _PRIORITY = {"heads": 0, "kv_heads": 0, "ff": 0, "vocab": 0, "experts": 0,
+                 "ssm_inner": 0, "batch": 0, "head_dim_shard": 1,
+                 "kv_lora": 1, "q_lora": 1, "attn_qseq": 1, "cache_seq": 1}
+
+    def spec(self, shape: Sequence[int], logical_axes: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(logical_axes), (shape, logical_axes)
+        taken: set = set()
+        entries: list = [None] * len(shape)
+        order = sorted(range(len(shape)),
+                       key=lambda i: (self._PRIORITY.get(logical_axes[i], 2), i))
+        for i in order:
+            r = self._resolve_axis(logical_axes[i], shape[i], taken)
+            if r is not None:
+                taken.update((r,) if isinstance(r, str) else r)
+            entries[i] = r
+        return P(*entries)
+
+    def sharding(self, shape, logical_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, logical_axes))
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_specs(rules: ShardingRules, abstract_params, axes_tree):
+    """Map a pytree of ShapeDtypeStructs + parallel axes tree -> PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, leaf: rules.spec(leaf.shape, axes),
+        axes_tree,
+        abstract_params,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def tree_shardings(rules: ShardingRules, abstract_params, axes_tree):
+    specs = tree_specs(rules, abstract_params, axes_tree)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, rules: ShardingRules, logical_axes):
+    """with_sharding_constraint by logical axes (no-op off-mesh)."""
+    try:
+        spec = rules.spec(x.shape, logical_axes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+    except Exception:
+        return x

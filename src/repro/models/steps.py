@@ -1,0 +1,125 @@
+"""train_step / prefill_step / serve_step + input_specs for every shape.
+
+These are the functions the launcher lowers for the dry-run and the engine
+executes for real serving; they are pure and pjit-friendly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.optim import OptConfig, adamw_update, init_opt_state
+from repro.models.sharding import ShardingRules
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (b, s, V); labels (b, s) int32. Reduction always in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig, rules=None, mesh=None):
+    kwargs = {}
+    if cfg.stub_frontend and "embeds" in batch:
+        kwargs["embeds"] = batch["embeds"]
+    else:
+        kwargs["tokens"] = batch["tokens"]
+    logits, _, aux = tf.forward(params, cfg, mode="train", rules=rules,
+                                mesh=mesh, **kwargs)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + aux, (loss, aux)
+
+
+def train_step(state: Dict, batch: Dict, cfg: ModelConfig,
+               opt: OptConfig = OptConfig(), rules=None, mesh=None):
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    (total, (loss, aux)), grads = grad_fn(state["params"], batch, cfg, rules, mesh)
+    new_params, new_opt, gnorm = adamw_update(state["params"], grads,
+                                              state["opt"], opt)
+    new_state = {"params": new_params, "opt": new_opt}
+    metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm}
+    return new_state, metrics
+
+
+def prefill_step(params, batch: Dict, cfg: ModelConfig, max_len: int,
+                 rules=None, mesh=None):
+    """Full-sequence prefill, writes KV caches. Returns (last_logits, caches)."""
+    if cfg.encoder_only:
+        kwargs = {"embeds": batch["embeds"]} if cfg.stub_frontend else \
+                 {"tokens": batch["tokens"]}
+        logits, _, _ = tf.forward(params, cfg, mode="train", rules=rules,
+                                  mesh=mesh, **kwargs)
+        return logits, None
+    b = (batch["embeds"].shape[0] if cfg.stub_frontend and "embeds" in batch
+         else batch["tokens"].shape[0])
+    caches = tf.init_cache(cfg, b, max_len)
+    kwargs = {}
+    if cfg.stub_frontend and "embeds" in batch:
+        kwargs["embeds"] = batch["embeds"]
+    else:
+        kwargs["tokens"] = batch["tokens"]
+    logits, caches, _ = tf.forward(params, cfg, mode="prefill", caches=caches,
+                                   rules=rules, mesh=mesh, **kwargs)
+    return logits, caches
+
+
+def serve_step(params, tokens, caches, cfg: ModelConfig, rules=None, mesh=None):
+    """One decode step: tokens (b, 1) -> (new_token (b,), logits, caches)."""
+    logits, caches, _ = tf.forward(params, cfg, tokens=tokens, mode="decode",
+                                   caches=caches, rules=rules, mesh=mesh)
+    new_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return new_token, logits, caches
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params, _ = tf.init_model(cfg, key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for the dry-run (no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.stub_frontend:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.stub_frontend:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(shape.kind)
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Logical axes for every entry of input_specs."""
+    if shape.kind == "train":
+        if cfg.stub_frontend:
+            return {"embeds": ("batch", "seq", None), "labels": ("batch", "seq")}
+        return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if shape.kind == "prefill":
+        if cfg.stub_frontend:
+            return {"embeds": ("batch", "seq", None)}
+        return {"tokens": ("batch", "seq")}
+    return {"tokens": ("batch", None)}

@@ -1,0 +1,256 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(stabilized scalar-memory recurrence). Follows arXiv:2405.04517 with the
+standard log-space stabilization.
+
+mLSTM prefill uses a chunkwise form (within-chunk parallel quadratic term +
+inter-chunk recurrent (C, n, m) state) so prefill stays sub-quadratic and
+decode is O(1) per token. sLSTM is inherently sequential and runs as a
+lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Initializer, rms_norm
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    nh = cfg.num_heads
+    hd = d_in // nh
+    return d_in, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(init: Initializer, path: str, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_in, nh, hd = _mlstm_dims(cfg)
+    return {
+        "up": init.w(f"{path}.up", (d, 2, d_in), ("w_embed", None, "ssm_inner")),
+        "wq": init.w(f"{path}.wq", (d_in, d_in), ("ssm_inner", None)),
+        "wk": init.w(f"{path}.wk", (d_in, d_in), ("ssm_inner", None)),
+        "wv": init.w(f"{path}.wv", (d_in, d_in), ("ssm_inner", None)),
+        "wif": init.w(f"{path}.wif", (d_in, 2, nh), ("ssm_inner", None, "ssm_heads"),
+                      scale=0.01),
+        "b_if": init.const(f"{path}.b_if",
+                           __import__("numpy").concatenate(
+                               [__import__("numpy").full((1, nh), -3.0),
+                                __import__("numpy").full((1, nh), 3.0)]),
+                           (None, "ssm_heads")),
+        "norm": init.z(f"{path}.norm", (d_in,), ("ssm_inner",)),
+        "down": init.z(f"{path}.down", (d_in, d), ("ssm_inner", "w_embed")),
+    }
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk: int, unroll: bool = False):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (b, l, h, p); li (log input gate) / lf (log forget gate): (b, l, h).
+    Returns y (b,l,h,p) and final state (C (b,h,p,p), n (b,h,p), m (b,h)).
+    """
+    b, l, h, p = q.shape
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    c = l // chunk
+    r = lambda t: t.reshape(b, c, chunk, *t.shape[2:])
+    q, k, v, li, lf = r(q), r(k), r(v), r(li), r(lf)
+    q = q.astype(jnp.float32) * (p ** -0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    cum = jnp.cumsum(lf, axis=2)                              # inclusive
+    # intra-chunk log weights: w[t,s] = cum_t - cum_s + li_s (s <= t)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :] + li[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e30)
+
+    # chunk-summary (state) log weights: wS[s] = cum_Q - cum_s + li_s
+    wS = cum[:, :, -1:, :] - cum + li                          # (b,c,q,h)
+    mS_local = jnp.max(wS, axis=2)                             # (b,c,h)
+
+    def scan_fn(carry, inp):
+        C_prev, n_prev, m_prev = carry                         # (b,h,p,p),(b,h,p),(b,h)
+        seg_c, wS_c, mSl_c, cum_c, q_c, k_c, v_c = inp
+        # position-wise stabilizer: intra max vs decayed state stabilizer
+        m_intra = jnp.max(seg_c, axis=2)                   # (b,t,h)
+        m_state = cum_c + m_prev[:, None, :]                   # (b,t,h)
+        m_t = jnp.maximum(m_intra, m_state)
+        w_intra = jnp.exp(seg_c - m_t[:, :, None, :])          # (b,t,s,h)
+        w_state = jnp.exp(m_state - m_t)                       # (b,t,h)
+        scores = jnp.einsum("bthp,bshp->btsh", q_c, k_c)
+        num = (jnp.einsum("btsh,btsh,bshp->bthp", scores, w_intra, v_c)
+               + jnp.einsum("bthp,bhpx,bth->bthx", q_c, C_prev, w_state))
+        den = (jnp.einsum("btsh,btsh->bth", scores, w_intra)
+               + jnp.einsum("bthp,bhp,bth->bth", q_c, n_prev, w_state))
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update
+        m_new = jnp.maximum(cum_c[:, -1, :] + m_prev, mSl_c)
+        wS_st = jnp.exp(wS_c - m_new[:, None, :])              # (b,s,h)
+        dec = jnp.exp(cum_c[:, -1, :] + m_prev - m_new)        # (b,h)
+        C_new = (C_prev * dec[..., None, None]
+                 + jnp.einsum("bsh,bshp,bshx->bhpx", wS_st, k_c, v_c))
+        n_new = n_prev * dec[..., None] + jnp.einsum("bsh,bshp->bhp", wS_st, k_c)
+        return (C_new, n_new, m_new), y
+
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    init_state = (jnp.zeros((b, h, p, p), jnp.float32),
+                  jnp.zeros((b, h, p), jnp.float32),
+                  jnp.full((b, h), -1e30, jnp.float32))
+    final, ys = jax.lax.scan(scan_fn, init_state,
+                             (mv(seg), mv(wS), mv(mS_local), mv(cum), mv(q),
+                              mv(k), mv(v)),
+                             unroll=c if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, p)
+    return y, final
+
+
+def mlstm_forward(params, x, cfg: ModelConfig, return_state: bool = False,
+                  unroll_chunks: bool = False):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    h2 = jnp.einsum("bld,dgf->blgf", x, params["up"])
+    core_in, gate = h2[..., 0, :], h2[..., 1, :]
+    q = (core_in @ params["wq"]).reshape(*x.shape[:2], nh, hd)
+    k = (core_in @ params["wk"]).reshape(*x.shape[:2], nh, hd)
+    v = (core_in @ params["wv"]).reshape(*x.shape[:2], nh, hd)
+    if_gates = (jnp.einsum("blf,fgh->blgh", core_in, params["wif"])
+                + params["b_if"][None].astype(x.dtype))
+    li = if_gates[..., 0, :].astype(jnp.float32)               # log input gate
+    lf = jax.nn.log_sigmoid(if_gates[..., 1, :].astype(jnp.float32))
+    y, state = _mlstm_chunked(q, k, v, li, lf, cfg.xlstm.chunk_size,
+                              unroll=unroll_chunks)
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    out = y @ params["down"]
+    return out, ({"C": state[0], "n": state[1], "m": state[2]} if return_state else None)
+
+
+def mlstm_decode(params, x, cfg: ModelConfig, state: Dict):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    h2 = jnp.einsum("bld,dgf->blgf", x, params["up"])
+    core_in, gate = h2[..., 0, :], h2[..., 1, :]
+    q = (core_in @ params["wq"]).reshape(-1, nh, hd).astype(jnp.float32) * (hd ** -0.5)
+    k = (core_in @ params["wk"]).reshape(-1, nh, hd).astype(jnp.float32)
+    v = (core_in @ params["wv"]).reshape(-1, nh, hd).astype(jnp.float32)
+    if_gates = (jnp.einsum("blf,fgh->blgh", core_in, params["wif"])
+                + params["b_if"][None].astype(x.dtype))
+    li = if_gates[:, 0, 0, :].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(if_gates[:, 0, 1, :].astype(jnp.float32))
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    C_new = C * f_p[..., None, None] + jnp.einsum("bh,bhp,bhx->bhpx", i_p, k, v)
+    n_new = n * f_p[..., None] + i_p[..., None] * k
+    num = jnp.einsum("bhp,bhpx->bhx", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    out = y @ params["down"]
+    return out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    return {"C": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32)}
+
+
+def mlstm_state_axes():
+    return {"C": ("batch", "ssm_heads", None, None),
+            "n": ("batch", "ssm_heads", None),
+            "m": ("batch", "ssm_heads")}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(init: Initializer, path: str, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    f_up = int(cfg.xlstm.proj_factor_slstm * d)
+    return {
+        "wx": init.w(f"{path}.wx", (d, 4, d), ("w_embed", None, "ssm_inner")),
+        "r": init.w(f"{path}.r", (nh, hd, 4, hd), ("ssm_heads", None, None, None),
+                    scale=hd ** -0.5),
+        "b": init.const(f"{path}.b",
+                        __import__("numpy").concatenate(
+                            [__import__("numpy").zeros((2, nh, hd)),
+                             __import__("numpy").full((1, nh, hd), 3.0),
+                             __import__("numpy").zeros((1, nh, hd))]),
+                        (None, "ssm_heads", None)),
+        "norm": init.z(f"{path}.norm", (d,), ("norm",)),
+        "ff_wi": init.w(f"{path}.ff_wi", (d, 2, f_up), ("w_embed", None, "ff")),
+        "ff_wo": init.z(f"{path}.ff_wo", (f_up, d), ("ff", "w_embed")),
+    }
+
+
+def _slstm_step(params, carry, gx, cfg: ModelConfig):
+    """carry: (c, n, h, m) each (b, nh, hd); gx: (b, 4, d) pre-activations."""
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    c, n, h, m = carry
+    rec = jnp.einsum("bkh,khgx->bgkx", h, params["r"].astype(jnp.float32))
+    g = gx.reshape(gx.shape[0], 4, nh, hd).astype(jnp.float32) + rec \
+        + params["b"].astype(jnp.float32)[None]
+    z = jnp.tanh(g[:, 0])
+    li = g[:, 1]                                           # log input gate
+    lf = jax.nn.log_sigmoid(g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params, x, cfg: ModelConfig, state=None, return_state: bool = False):
+    b, l, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    gx = jnp.einsum("bld,dgf->blgf", x, params["wx"])      # (b,l,4,d)
+    if state is None:
+        zeros = jnp.zeros((b, nh, hd), jnp.float32)
+        carry = (zeros, zeros, zeros, jnp.full((b, nh, hd), -1e30, jnp.float32))
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, gx_t):
+        new = _slstm_step(params, carry, gx_t, cfg)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, l, d).astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    # gated FFN tail (proj_factor_slstm)
+    hff = jnp.einsum("bld,dgf->blgf", y, params["ff_wi"])
+    y = (jax.nn.gelu(hff[..., 0, :]) * hff[..., 1, :]) @ params["ff_wo"]
+    new_state = None
+    if return_state or state is not None:
+        new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y, new_state
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int):
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    sd = jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32)
+    return {"c": sd, "n": sd, "h": sd, "m": sd}
+
+
+def slstm_state_axes():
+    a = ("batch", "ssm_heads", None)
+    return {"c": a, "n": a, "h": a, "m": a}

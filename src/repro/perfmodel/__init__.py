@@ -1,0 +1,1 @@
+"""Client runtime estimation: analytical roofline + JAX polynomial regression."""

@@ -1,0 +1,115 @@
+"""ML-assisted runtime prediction (paper §III-E1), in JAX.
+
+The paper fits polynomial regression over ~58K real datapoints (DGX-H100 +
+vLLM + LLaMA2-70B): decode runtime as a polynomial in (batch, past tokens),
+prefill runtime in (past tokens, prefill tokens, batch, tokens^2). We
+implement closed-form ridge regression (normal equations solved in fp64-ish
+fp32 JAX) plus jit/vmap batched prediction — this is what gives the paper's
+20-50x speedup over re-running the analytical model per event.
+
+Datapoints come either from a real-trace CSV or from ``analytical.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.perfmodel import analytical as ana
+from repro.perfmodel.hardware import ClusterSpec
+
+
+def _poly_features_decode(batch, past):
+    b = batch.astype(jnp.float32)
+    p = past.astype(jnp.float32)
+    return jnp.stack([jnp.ones_like(b), b, p, b * p, b * b, p * p], axis=-1)
+
+
+def _poly_features_prefill(past, new, batch):
+    p = past.astype(jnp.float32)
+    n = new.astype(jnp.float32)
+    b = batch.astype(jnp.float32)
+    return jnp.stack([jnp.ones_like(p), p, n, b, n * n, p * n, b * n], axis=-1)
+
+
+@dataclass
+class FittedModel:
+    weights: jnp.ndarray
+    feature_fn: Callable
+    mse: float
+
+    def predict(self, *args) -> jnp.ndarray:
+        x = self.feature_fn(*[jnp.asarray(a) for a in args])
+        return x @ self.weights
+
+
+def ridge_fit(X: jnp.ndarray, y: jnp.ndarray, lam: float = 1e-6) -> jnp.ndarray:
+    XtX = X.T @ X + lam * jnp.eye(X.shape[1])
+    Xty = X.T @ y
+    return jnp.linalg.solve(XtX, Xty)
+
+
+def fit_decode_model(cfg: ModelConfig, cluster: ClusterSpec,
+                     batches: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128),
+                     contexts: Sequence[int] = (128, 512, 1024, 2048, 4096, 8192),
+                     ) -> FittedModel:
+    bs, ps, ys = [], [], []
+    for b in batches:
+        for c in contexts:
+            t = ana.decode_step_time(cfg, cluster, b, c).time
+            bs.append(b); ps.append(c); ys.append(t)
+    b = jnp.asarray(bs); p = jnp.asarray(ps); y = jnp.asarray(ys, jnp.float32)
+    X = _poly_features_decode(b, p)
+    w = ridge_fit(X, y)
+    mse = float(jnp.mean((X @ w - y) ** 2))
+    return FittedModel(w, _poly_features_decode, mse)
+
+
+def fit_prefill_model(cfg: ModelConfig, cluster: ClusterSpec,
+                      pasts: Sequence[int] = (0, 512, 2048, 8192),
+                      news: Sequence[int] = (64, 128, 256, 512, 1024, 2048, 4096),
+                      batches: Sequence[int] = (1, 2, 4, 8),
+                      ) -> FittedModel:
+    ps, ns, bs, ys = [], [], [], []
+    for p_ in pasts:
+        for n_ in news:
+            for b_ in batches:
+                t = ana.prefill_time(cfg, cluster, n_, b_, past_tokens=p_).time
+                ps.append(p_); ns.append(n_); bs.append(b_); ys.append(t)
+    p = jnp.asarray(ps); n = jnp.asarray(ns); b = jnp.asarray(bs)
+    y = jnp.asarray(ys, jnp.float32)
+    X = _poly_features_prefill(p, n, b)
+    w = ridge_fit(X, y)
+    mse = float(jnp.mean((X @ w - y) ** 2))
+    return FittedModel(w, _poly_features_prefill, mse)
+
+
+def fit_from_trace(rows: np.ndarray, kind: str = "decode") -> FittedModel:
+    """rows: (N, 3) [batch, past, time] for decode or (N, 4)
+    [past, new, batch, time] for prefill — real-hardware trace ingest."""
+    rows = jnp.asarray(rows, jnp.float32)
+    if kind == "decode":
+        X = _poly_features_decode(rows[:, 0], rows[:, 1])
+        y = rows[:, 2]
+        fn = _poly_features_decode
+    else:
+        X = _poly_features_prefill(rows[:, 0], rows[:, 1], rows[:, 2])
+        y = rows[:, 3]
+        fn = _poly_features_prefill
+    w = ridge_fit(X, y)
+    return FittedModel(w, fn, float(jnp.mean((X @ w - y) ** 2)))
+
+
+@jax.jit
+def _batched_predict(w, X):
+    return X @ w
+
+
+def batched_decode_predict(model: FittedModel, batch_arr, past_arr):
+    """vmap/jit fast path used by the simulator hot loop."""
+    X = _poly_features_decode(jnp.asarray(batch_arr), jnp.asarray(past_arr))
+    return _batched_predict(model.weights, X)

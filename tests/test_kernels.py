@@ -1,0 +1,94 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle across
+shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.pq_scan import pq_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b, s, nh, kvh, d, dv=None, dtype=jnp.float32, t=None):
+    t = t or s
+    dv = dv or d
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, nh, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, kvh, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (b, t, kvh, dv), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,nh,kvh,d", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA
+    (2, 192, 8, 1, 32),      # MQA, non-pow2 seq
+    (1, 512, 16, 4, 128),    # larger head_dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(b, s, nh, kvh, d, causal):
+    q, k, v = _qkv(b, s, nh, kvh, d)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=64, block_k=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q, k, v = _qkv(2, 128, 8, 2, 64, dtype=jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, interpret=True,
+                          block_q=64, block_k=64)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("b,S,nh,kvh,d,block", [
+    (2, 300, 8, 2, 64, 128),
+    (1, 1024, 4, 1, 32, 256),
+    (3, 257, 16, 16, 64, 64),
+])
+def test_decode_attention_matches_ref(b, S, nh, kvh, d, block):
+    q, k, v = _qkv(b, 1, nh, kvh, d, t=S)
+    lengths = jax.random.randint(jax.random.fold_in(KEY, 9), (b,), 1, S)
+    out = decode_attention(q, k, v, lengths, interpret=True, block_s=block)
+    want = ref.decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_masks_beyond_length():
+    """Garbage in the cache past `length` must not affect the output."""
+    b, S, nh, kvh, d = 1, 128, 4, 4, 32
+    q, k, v = _qkv(b, 1, nh, kvh, d, t=S)
+    lengths = jnp.array([40], jnp.int32)
+    k2 = k.at[:, 40:].set(1e4)
+    v2 = v.at[:, 40:].set(-1e4)
+    o1 = decode_attention(q, k, v, lengths, interpret=True, block_s=64)
+    o2 = decode_attention(q, k2, v2, lengths, interpret=True, block_s=64)
+    np.testing.assert_allclose(o1, o2, atol=1e-6)
+
+
+@pytest.mark.parametrize("N,M,K,block", [
+    (1000, 16, 256, 256),
+    (4096, 8, 256, 1024),
+    (513, 32, 64, 128),
+])
+def test_pq_scan_matches_ref(N, M, K, block):
+    codes = jax.random.randint(jax.random.fold_in(KEY, 4), (N, M), 0, K)
+    lut = jax.random.normal(jax.random.fold_in(KEY, 5), (M, K), jnp.float32)
+    out = pq_scan(codes, lut, interpret=True, block_n=block)
+    want = ref.pq_scan(codes, lut)
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 96), (1024, 1024)])
+def test_chunked_flash_matches_ref(bq, bk):
+    q, k, v = _qkv(2, 333, 8, 2, 32, dv=16)
+    for causal in (True, False):
+        o1 = ref.chunked_flash_attention(q, k, v, causal=causal,
+                                         block_q=bq, block_k=bk)
+        o2 = ref.flash_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=2e-5)

@@ -1,0 +1,115 @@
+"""Directional checks of the paper's headline claims (§I contributions,
+§IV-A, §V-A). These are qualitative — the simulator must reproduce the
+paper's orderings, not its absolute numbers."""
+import numpy as np
+import pytest
+
+from repro.core import SLO, SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.workload import AZURE_CODE, AZURE_CONV
+
+
+def _run(strategy: str, rate: float, n=60, trace=AZURE_CONV, **wl_kw):
+    if strategy == "disaggregated":
+        spec = SystemSpec(strategy="disaggregated", n_prefill=2, n_decode=2,
+                          with_pre_post=False)
+    else:
+        spec = SystemSpec(n_llm_clients=4, strategy=strategy,
+                          with_pre_post=False)
+    coord = build_system(spec)
+    wl = WorkloadConfig(trace=trace, rate=rate, n_requests=n,
+                        disaggregated=(strategy == "disaggregated"),
+                        postprocess=False, seed=21, **wl_kw)
+    coord.submit(generate(wl))
+    m = coord.run()
+    horizon = max(r.completion_time for r in m.serviced)
+    return m.summary(horizon=horizon, total_energy=coord.total_energy,
+                     slo=SLO())
+
+
+def test_static_batching_has_worst_ttft():
+    s_static = _run("static", 3.0)
+    s_cont = _run("continuous", 3.0)
+    assert s_static["ttft_p50"] > 5 * s_cont["ttft_p50"]
+
+
+def test_continuous_best_ttft_at_low_rate():
+    """Paper: 'Continuous batching is optimal for TTFT in most cases'."""
+    s = {k: _run(k, 1.0) for k in ("continuous", "chunked", "static")}
+    best = min(s, key=lambda k: s[k]["ttft_p50"])
+    assert best == "continuous" or (
+        s["continuous"]["ttft_p50"] <= 1.1 * s[best]["ttft_p50"])
+
+
+def test_disaggregated_best_throughput_per_energy():
+    """Paper key observation i): disaggregated gives highest thpt/energy in
+    most cases (decode-only clients are memory-bound, burn less power)."""
+    s = {k: _run(k, 3.0) for k in ("continuous", "chunked", "disaggregated")}
+    best = max(s, key=lambda k: s[k].get("tok_per_joule", 0.0))
+    assert best == "disaggregated", {k: v.get("tok_per_joule") for k, v in s.items()}
+
+
+def test_chunked_sustains_higher_injection():
+    """Paper key observation ii): chunked sustains higher injection rates
+    (throughput holds up under load) at the cost of TTFT."""
+    lo = _run("chunked", 2.0, trace=AZURE_CODE)
+    hi = _run("chunked", 8.0, trace=AZURE_CODE)
+    hi_cont = _run("continuous", 8.0, trace=AZURE_CODE)
+    assert hi["throughput_tok_s"] >= 0.95 * lo["throughput_tok_s"]
+    assert hi["throughput_tok_s"] >= hi_cont["throughput_tok_s"] * 0.95
+
+
+def test_reasoning_inflates_memory_and_latency():
+    """§IV-A: multi-path reasoning multiplies KV demand and token load."""
+    plain = _run("continuous", 1.0)
+    reason = _run("continuous", 1.0, pipeline="reasoning",
+                  reasoning_scale=4.0, reasoning_branches=8)
+    assert reason["tokens"] > 4 * plain["tokens"]
+    assert reason["e2e_p50"] > plain["e2e_p50"]
+
+
+def test_rag_needs_looser_ttft_slo():
+    """RAG adds embed+retrieve before prefill -> paper uses a 1000ms TTFT
+    baseline instead of 250ms."""
+    coord = build_system(SystemSpec(n_llm_clients=2, with_rag=True,
+                                    rag_embed_on_npu=True,
+                                    with_pre_post=False))
+    wl = WorkloadConfig(rate=1.0, n_requests=30, pipeline="rag",
+                        postprocess=False, seed=23)
+    coord.submit(generate(wl))
+    m = coord.run()
+    plain = _run("continuous", 1.0, n=30)
+    assert m.summary()["ttft_p50"] > plain["ttft_p50"]
+
+
+def test_recompute_competitive_for_short_kv_only():
+    """§V-B: recomputation is viable for short KV, prohibitive for long."""
+    from repro.configs import get_config
+    from repro.perfmodel import analytical as ana
+    from repro.perfmodel.hardware import ClusterSpec, H100, TIER_RACK
+    from repro.core.memory import expected_retrieval_latency
+    model = get_config("llama3_70b")
+    cluster = ClusterSpec(H100, 2, 2)
+    kvb = ana.kv_bytes_per_token(model)
+    for tokens, expect_retrieval_wins in ((4_000, False), (24_000, True)):
+        recompute = ana.prefill_time(model, cluster, tokens).time
+        retrieve = expected_retrieval_latency(tokens * kvb, [TIER_RACK],
+                                              miss_cost=recompute)
+        if expect_retrieval_wins:
+            assert recompute > retrieve
+        # short-KV: recompute within ~2x of rack retrieval => competitive
+        else:
+            assert recompute < 2.0 * retrieve
+
+
+def test_embedding_on_npu_beats_small_cpu():
+    """§IV-B Fig. 9: offloading a large embed model to an NPU cuts TTFT."""
+    res = {}
+    for npu in (False, True):
+        coord = build_system(SystemSpec(
+            n_llm_clients=1, with_rag=True, rag_colocated=not npu,
+            rag_embed_on_npu=npu, with_pre_post=False))
+        wl = WorkloadConfig(rate=0.3, n_requests=15, pipeline="rag",
+                            postprocess=False, seed=29)
+        coord.submit(generate(wl))
+        res[npu] = coord.run().summary()["ttft_p50"]
+    assert res[True] <= res[False]

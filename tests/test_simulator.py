@@ -1,0 +1,298 @@
+"""HERMES simulator: unit + integration + hypothesis property tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (SLO, SystemSpec, WorkloadConfig, build_system,
+                        generate)
+from repro.core.comm import Network
+from repro.core.events import EventQueue
+from repro.core.llm_scheduler import ClientPerf, LLMScheduler, SchedulerLimits
+from repro.core.memory import (MemoryManager, expected_retrieval_latency,
+                               sample_retrieval_latency)
+from repro.core.request import Request, Stage, LLM, regular_pipeline
+from repro.core.workload import AZURE_CONV, arrival_times
+from repro.perfmodel import analytical as ana
+from repro.perfmodel.hardware import (CacheTierSpec, ClusterSpec, H100,
+                                      LinkSpec)
+
+MODEL = get_config("llama3_70b")
+CLUSTER = ClusterSpec(H100, n_chips=2, tp=2)
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(min_value=0, max_value=1e6,
+                          allow_nan=False), min_size=1, max_size=50))
+def test_event_queue_monotone(times):
+    q = EventQueue()
+    for t in times:
+        q.push(t, "x")
+    popped = []
+    while len(q):
+        popped.append(q.pop().time)
+    assert popped == sorted(popped)
+    assert q.now == max(times)
+
+
+# ---------------------------------------------------------------------------
+# memory hierarchy Eq. 1
+# ---------------------------------------------------------------------------
+
+def _tier(hit, lat=1e-6, bw=1e9, cap=1e12):
+    return CacheTierSpec("t", cap, lat, bw, hit)
+
+
+def test_eq1_closed_form_two_levels():
+    t1, t2 = _tier(0.6, 1e-6, 1e9), _tier(0.9, 1e-5, 1e8)
+    size, miss = 1e6, 0.5
+    want = (0.6 * (1e-6 + size / 1e9)
+            + 0.4 * (0.9 * (1e-5 + size / 1e8) + 0.1 * miss))
+    got = expected_retrieval_latency(size, [t1, t2], miss)
+    assert math.isclose(got, want, rel_tol=1e-12)
+
+
+@given(h1=st.floats(0.01, 0.99), h2=st.floats(0.01, 0.99),
+       size=st.floats(1e3, 1e9))
+@settings(max_examples=50, deadline=None)
+def test_eq1_monotone_in_hit_rate(h1, h2, size):
+    """Higher L1 hit rate can never increase expected latency (L1 faster)."""
+    lo, hi = sorted([h1, h2])
+    t2 = _tier(0.9, 1e-5, 1e8)
+    miss = 1.0
+    a = expected_retrieval_latency(size, [_tier(lo, 1e-7, 1e10), t2], miss)
+    b = expected_retrieval_latency(size, [_tier(hi, 1e-7, 1e10), t2], miss)
+    assert b <= a + 1e-12
+
+
+@given(size=st.floats(1e3, 1e8))
+@settings(max_examples=30, deadline=None)
+def test_eq1_sample_mean_converges(size):
+    rng = np.random.default_rng(0)
+    tiers = [_tier(0.5, 1e-6, 1e9), _tier(0.8, 1e-5, 1e8)]
+    samples = [sample_retrieval_latency(size, tiers, 0.3, rng)
+               for _ in range(4000)]
+    want = expected_retrieval_latency(size, tiers, 0.3)
+    assert abs(np.mean(samples) - want) / want < 0.15
+
+
+# ---------------------------------------------------------------------------
+# memory manager
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(1.0, 100.0), min_size=1, max_size=40))
+def test_memory_never_exceeds_capacity_on_admit(sizes):
+    mm = MemoryManager(capacity=500.0)
+    admitted = []
+    for s in sizes:
+        if mm.admit(s):
+            admitted.append(s)
+    assert mm.used <= mm.capacity + 1e-9
+    assert math.isclose(mm.used, sum(admitted), rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# network / comm
+# ---------------------------------------------------------------------------
+
+def test_network_contention_serializes():
+    net = Network()
+    net.add_link("l", LinkSpec("l", 1e9, 1e-3))
+    net.connect("a", "b", ["l"])
+    t1 = net.transfer("a", "b", 1e9, now=0.0)        # 1s + 1ms
+    t2 = net.transfer("a", "b", 1e9, now=0.0)        # queued behind first
+    assert math.isclose(t1, 1.001, rel_tol=1e-6)
+    assert t2 >= t1 + 1.0
+
+
+def test_layerwise_transfer_cheaper_than_full():
+    net = Network()
+    net.add_link("l", LinkSpec("l", 1e9, 1e-3))
+    net.connect("a", "b", ["l"])
+    t_full = net.transfer("a", "b", 8e8, now=0.0, granularity="full")
+    net2 = Network()
+    net2.add_link("l", LinkSpec("l", 1e9, 1e-3))
+    net2.connect("a", "b", ["l"])
+    t_layer = net2.transfer("a", "b", 8e8, now=0.0, granularity="layerwise",
+                            n_layers=80)
+    assert t_layer < t_full
+
+
+# ---------------------------------------------------------------------------
+# analytical perf model sanity
+# ---------------------------------------------------------------------------
+
+def test_prefill_compute_bound_decode_memory_bound():
+    pre = ana.prefill_time(MODEL, CLUSTER, 2048, 1)
+    dec = ana.decode_step_time(MODEL, CLUSTER, 8, 2048)
+    assert pre.bound == "compute"
+    assert dec.bound == "memory"
+    assert pre.time > dec.time
+
+
+def test_decode_time_increases_with_batch_and_context():
+    t1 = ana.decode_step_time(MODEL, CLUSTER, 1, 1024).time
+    t2 = ana.decode_step_time(MODEL, CLUSTER, 64, 1024).time
+    t3 = ana.decode_step_time(MODEL, CLUSTER, 64, 8192).time
+    assert t1 <= t2 <= t3
+
+
+def test_regression_matches_analytical():
+    from repro.perfmodel import regression as reg
+    m = reg.fit_decode_model(MODEL, CLUSTER)
+    for b, c in [(4, 1024), (32, 2048), (100, 5000)]:
+        want = ana.decode_step_time(MODEL, CLUSTER, b, c).time
+        got = float(m.predict([b], [c])[0])
+        assert abs(got - want) / want < 0.25, (b, c, got, want)
+
+
+# ---------------------------------------------------------------------------
+# LLM scheduler semantics
+# ---------------------------------------------------------------------------
+
+def _mk_requests(n, in_tok=512, out_tok=8):
+    return [Request(arrival=0.0, input_tokens=in_tok, output_tokens=out_tok,
+                    stages=[Stage(LLM)]) for _ in range(n)]
+
+
+@pytest.mark.parametrize("strategy", ["static", "continuous", "chunked",
+                                      "mixed"])
+def test_scheduler_completes_all_requests(strategy):
+    sched = LLMScheduler(strategy, MODEL, CLUSTER,
+                         limits=SchedulerLimits(max_batch=4, chunk_size=256))
+    reqs = _mk_requests(9)
+    for r in reqs:
+        sched.add(r)
+    now, finished, guard = 0.0, [], 0
+    while sched.has_work() and guard < 10_000:
+        step = sched.plan_step()
+        assert step is not None, "work pending but no step planned"
+        now += step.duration
+        finished += sched.finish_step(step, now)
+        guard += 1
+    assert len(finished) == 9
+    for r in finished:
+        assert r.decoded_tokens == r.output_tokens
+        assert r.first_token_time is not None
+        assert r.token_times == sorted(r.token_times)
+
+
+def test_scheduler_memory_conservation():
+    sched = LLMScheduler("continuous", MODEL, CLUSTER,
+                         limits=SchedulerLimits(max_batch=8))
+    for r in _mk_requests(6, in_tok=1024, out_tok=5):
+        sched.add(r)
+    now = 0.0
+    while sched.has_work():
+        step = sched.plan_step()
+        now += step.duration
+        sched.finish_step(step, now)
+        live = sum(sched.admitted_bytes.values())
+        assert math.isclose(sched.memory.used, live, rel_tol=1e-9)
+    assert sched.memory.used == 0.0
+
+
+def test_chunked_interleaves_prefill_and_decode():
+    sched = LLMScheduler("chunked", MODEL, CLUSTER,
+                         limits=SchedulerLimits(max_batch=8, chunk_size=128))
+    for r in _mk_requests(4, in_tok=1000, out_tok=20):
+        sched.add(r)
+    kinds = set()
+    now = 0.0
+    for _ in range(200):
+        if not sched.has_work():
+            break
+        step = sched.plan_step()
+        if step.prefill and step.decode:
+            kinds.add("both")
+        now += step.duration
+        sched.finish_step(step, now)
+    assert "both" in kinds, "chunked batching never piggybacked decodes"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end conservation + integration (hypothesis over workloads)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(5, 25), rate=st.floats(0.5, 8.0),
+       process=st.sampled_from(["poisson", "uniform", "bursty"]),
+       strategy=st.sampled_from(["continuous", "chunked", "static", "mixed"]))
+@settings(max_examples=12, deadline=None)
+def test_request_conservation(n, rate, process, strategy):
+    coord = build_system(SystemSpec(n_llm_clients=2, strategy=strategy))
+    reqs = generate(WorkloadConfig(n_requests=n, rate=rate, process=process,
+                                   seed=42))
+    coord.submit(reqs)
+    m = coord.run()
+    assert len(m.serviced) == n              # injected == serviced
+    for r in m.serviced:
+        assert r.done
+        assert r.e2e is not None and r.e2e > 0
+        assert r.decoded_tokens == r.output_tokens
+        # stage times are causally ordered
+        ends = [s.end_time for s in r.stages]
+        assert ends == sorted(ends)
+
+
+def test_disaggregated_conservation_and_kv_transfer():
+    coord = build_system(SystemSpec(strategy="disaggregated", n_prefill=2,
+                                    n_decode=2))
+    reqs = generate(WorkloadConfig(n_requests=20, rate=2.0, seed=7,
+                                   disaggregated=True))
+    coord.submit(reqs)
+    m = coord.run()
+    assert len(m.serviced) == 20
+    assert m.comm_bytes > 0, "disaggregation must transfer KV caches"
+
+
+def test_arrival_times_rate():
+    rng = np.random.default_rng(0)
+    t = arrival_times(rng, 5000, rate=10.0, process="poisson")
+    assert abs(t[-1] - 500.0) / 500.0 < 0.1
+
+
+def test_fault_recovery_no_request_lost():
+    coord = build_system(SystemSpec(n_llm_clients=3))
+    coord.schedule_failure("llm0", at=1.0, recover_at=30.0)
+    coord.schedule_failure("llm1", at=5.0)
+    reqs = generate(WorkloadConfig(n_requests=30, rate=3.0, seed=11))
+    coord.submit(reqs)
+    m = coord.run()
+    assert len(m.serviced) == 30
+
+
+def test_elastic_scale_out_helps():
+    def run(scale_out: bool):
+        coord = build_system(SystemSpec(n_llm_clients=1))
+        if scale_out:
+            from repro.core.client import LLMClient
+            c0 = next(iter(coord.clients.values()))
+            extra = LLMClient("llm_extra", c0.cluster, c0.model_cfg,
+                              "continuous")
+            coord.schedule_add_client(extra, at=1.0)
+        reqs = generate(WorkloadConfig(n_requests=30, rate=4.0, seed=13))
+        coord.submit(reqs)
+        m = coord.run()
+        assert len(m.serviced) == 30
+        return np.mean(m.e2es)
+
+    assert run(True) < run(False)
+
+
+def test_straggler_rerouting():
+    coord = build_system(SystemSpec(n_llm_clients=2,
+                                    straggler_deadline=0.5,
+                                    router_policy="round_robin"))
+    # make llm0 a 100x straggler
+    coord.clients["llm0"].slowdown = 100.0
+    reqs = generate(WorkloadConfig(n_requests=20, rate=4.0, seed=17))
+    coord.submit(reqs)
+    m = coord.run()
+    assert len(m.serviced) == 20
+    assert sum(r.preemptions for r in m.serviced) > 0, \
+        "straggler deadline never triggered a re-route"

@@ -1,0 +1,194 @@
+"""Substrate tests: checkpointing, data pipeline, optimizer, engine, tracing."""
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.configs import get_reduced_config
+from repro.data.pipeline import DataConfig, batch_at
+from repro.engine.runner import Engine
+from repro.models import steps
+from repro.models.optim import OptConfig, adamw_update, init_opt_state, lr_at
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2, 2), jnp.bfloat16),
+                  "d": jnp.array(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 5, t, extra={"note": "hi"})
+        got, man = ckpt.restore(d, t)
+        assert man["step"] == 5 and man["extra"]["note"] == "hi"
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest_and_gc():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(d, s, t, keep=2)
+        assert ckpt.latest_step(d) == 5
+        kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(kept) == 2
+        _, man = ckpt.restore(d, t)
+        assert man["step"] == 5
+
+
+def test_checkpoint_atomicity_tmp_dirs_ignored():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, t)
+        os.makedirs(os.path.join(d, ".tmp_partial"), exist_ok=True)  # fake crash
+        assert ckpt.latest_step(d) == 1
+
+
+def test_train_state_checkpoint_roundtrip():
+    cfg = get_reduced_config("gemma_2b").replace(param_dtype="float32",
+                                                 compute_dtype="float32")
+    state = steps.init_train_state(cfg, KEY)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 3, state)
+        got, _ = ckpt.restore(d, state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_restartable():
+    dc = DataConfig(vocab_size=128, seq_len=32, global_batch=8)
+    b1 = batch_at(dc, 7)
+    b2 = batch_at(dc, 7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = batch_at(dc, 8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_slices_disjoint():
+    base = DataConfig(vocab_size=128, seq_len=16, global_batch=8, n_hosts=2)
+    a = batch_at(DataConfig(**{**base.__dict__, "host_id": 0}), 0)
+    b = batch_at(DataConfig(**{**base.__dict__, "host_id": 1}), 0)
+    full = batch_at(DataConfig(**{**base.__dict__, "n_hosts": 1}), 0)
+    np.testing.assert_array_equal(np.concatenate([a["tokens"], b["tokens"]]),
+                                  full["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    dc = DataConfig(vocab_size=64, seq_len=16, global_batch=4)
+    b = batch_at(dc, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    w = {"w": jnp.array([5.0, -3.0])}
+    opt = OptConfig(lr=0.1, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    st_ = init_opt_state(w)
+    for _ in range(100):
+        g = {"w": 2 * w["w"]}
+        w, st_, _ = adamw_update(w, g, st_, opt)
+    assert float(jnp.sum(jnp.abs(w["w"]))) < 0.5
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=30, deadline=None)
+def test_lr_schedule_bounded(step):
+    opt = OptConfig(lr=1e-3, warmup_steps=100, total_steps=5000)
+    lr = float(lr_at(opt, jnp.array(step)))
+    assert 0.0 <= lr <= opt.lr + 1e-12
+
+
+def test_grad_clipping_bounds_update():
+    opt = OptConfig(lr=0.1, grad_clip=1.0, warmup_steps=1, weight_decay=0.0)
+    w = {"w": jnp.zeros(4)}
+    st_ = init_opt_state(w)
+    g = {"w": jnp.full(4, 1e6)}
+    w2, _, gnorm = adamw_update(w, g, st_, opt)
+    assert float(gnorm) > 1e5
+    assert float(jnp.max(jnp.abs(w2["w"]))) <= 0.2  # lr * O(1)
+
+
+# ---------------------------------------------------------------------------
+# real-execution engine
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_batched_requests():
+    cfg = get_reduced_config("gemma_2b")
+    eng = Engine(cfg, max_batch=2, max_len=96)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        eng.submit(rng.integers(0, cfg.vocab_size, 12), max_new_tokens=6)
+    done = eng.run()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.tokens) == 6
+        assert r.ttft is not None and r.ttft > 0
+
+
+def test_engine_matches_sequential_decode():
+    """Batched slot decoding must equal decoding each request alone."""
+    cfg = get_reduced_config("gemma_2b")
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, 10),
+               rng.integers(0, cfg.vocab_size, 17)]
+    eng = Engine(cfg, max_batch=2, max_len=64, seed=3)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    batched = {tuple(r.prompt.tolist()): r.tokens for r in eng.run()}
+    for p in prompts:
+        solo = Engine(cfg, max_batch=1, max_len=64, seed=3)
+        solo.submit(p, max_new_tokens=5)
+        (r,) = solo.run()
+        assert batched[tuple(p.tolist())] == r.tokens
+
+
+def test_engine_preemption_requeues():
+    cfg = get_reduced_config("gemma_2b")
+    eng = Engine(cfg, max_batch=1, max_len=64)
+    eng.submit(np.arange(8) % cfg.vocab_size, max_new_tokens=6)
+    eng._admit()
+    eng._step_decode()
+    eng.preempt_slot(0)
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 6
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_valid_json():
+    from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+    from repro.core.tracing import to_chrome_trace
+    coord = build_system(SystemSpec(n_llm_clients=1))
+    coord.submit(generate(WorkloadConfig(n_requests=5, rate=5.0)))
+    m = coord.run()
+    with tempfile.TemporaryDirectory() as d:
+        p = to_chrome_trace(m.serviced, os.path.join(d, "t.json"))
+        with open(p) as f:
+            data = json.load(f)
+        assert len(data["traceEvents"]) >= 5 * 3
