@@ -1,0 +1,112 @@
+"""Paged KV-cache sweep: block size x preemption policy x spill-tier
+bandwidth x shrinking HBM capacity.
+
+The headline curve is the swap-vs-recompute latency crossover: with a fast
+spill tier (host DRAM over PCIe), swapping beats re-running prefill as HBM
+shrinks; over a slow remote tier, recompute wins earlier. Emits CSV rows for
+the harness plus a JSON artifact (``kv_paging.json``) with the full grid.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import row
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.llm_scheduler import SchedulerLimits
+from repro.core.workload import TraceSpec
+from repro.perfmodel.hardware import (CacheTierSpec, ETH_RACK, PCIE5,
+                                      TIER_HOST_DRAM)
+
+# spill-tier bandwidth axis: fast host DRAM vs slow remote-only pool
+SWAP_TIERS = {
+    "pcie_dram": (TIER_HOST_DRAM,),
+    "rack_pool": (CacheTierSpec("rack-pool", 64e12, ETH_RACK.latency,
+                                ETH_RACK.bandwidth, 1.0),),
+    "slow_pool": (CacheTierSpec("slow-pool", 64e12, 1e-3,
+                                PCIE5.bandwidth / 32, 1.0),),
+}
+
+BLOCK_TOKENS = (16, 64, 256)
+CAPACITY_FRACS = (1.0, 0.08, 0.05, 0.03, 0.02)
+N_REQUESTS = 40
+RATE = 4.0
+# bounded request sizes so the smallest pools still hold one request and the
+# capacity axis maps to batching pressure, not single-request OOM
+TRACE = TraceSpec("kvpage", input_mean=512, input_std=0.4, output_mean=192,
+                  output_std=0.4, input_max=1024, output_max=384)
+
+
+def _run_one(block_tokens: int, policy: str, tier_name: str,
+             frac: float) -> Dict:
+    limits = SchedulerLimits(max_batch=32, kv_block_tokens=block_tokens,
+                             preemption=policy, kv_capacity_frac=frac,
+                             swap_tiers=SWAP_TIERS[tier_name])
+    spec = SystemSpec(n_llm_clients=2, strategy="continuous", limits=limits,
+                      with_pre_post=False)
+    coord = build_system(spec)
+    wl = WorkloadConfig(trace=TRACE, rate=RATE, n_requests=N_REQUESTS, seed=5,
+                        postprocess=False)
+    coord.submit(generate(wl))
+    m = coord.run()
+    s = m.summary()
+    return {
+        "block_tokens": block_tokens, "preemption": policy,
+        "swap_tier": tier_name, "capacity_frac": frac,
+        "n_serviced": s["n_serviced"],
+        "e2e_p50": s["e2e_p50"], "e2e_p90": s["e2e_p90"],
+        "ttft_p90": s["ttft_p90"], "tpot_p90": s["tpot_p90"],
+        "page_faults": s["kv_page_faults"],
+        "evictions": s["kv_evictions"],
+        "swap_bytes": s["kv_swap_bytes_out"] + s["kv_swap_bytes_in"],
+        "recompute_drops": s["kv_recompute_drops"],
+        "preemptions": s["preemptions"],
+    }
+
+
+def run() -> List[str]:
+    out: List[str] = []
+    grid: List[Dict] = []
+    for tier_name in SWAP_TIERS:
+        for block_tokens in BLOCK_TOKENS:
+            for frac in CAPACITY_FRACS:
+                per_policy = {}
+                t0 = time.perf_counter()
+                for policy in ("swap", "recompute"):
+                    try:
+                        res = _run_one(block_tokens, policy, tier_name, frac)
+                    except MemoryError:
+                        res = {"block_tokens": block_tokens,
+                               "preemption": policy, "swap_tier": tier_name,
+                               "capacity_frac": frac, "oom": True}
+                    per_policy[policy] = res
+                    grid.append(res)
+                us = (time.perf_counter() - t0) * 1e6
+                sw, rc = per_policy["swap"], per_policy["recompute"]
+                if "oom" in sw or "oom" in rc:
+                    derived = "oom (pool < one request)"
+                else:
+                    winner = ("swap" if sw["e2e_p50"] <= rc["e2e_p50"]
+                              else "recompute")
+                    derived = (f"swap_p50={sw['e2e_p50']:.2f}s "
+                               f"rec_p50={rc['e2e_p50']:.2f}s win={winner} "
+                               f"faults={sw['page_faults']}")
+                out.append(row(
+                    f"kvpage_{tier_name}_b{block_tokens}_f{frac}",
+                    us, derived))
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "kv_paging.json")
+    with open(path, "w") as f:
+        json.dump({"sweep": "block_tokens x preemption x swap_tier x "
+                            "hbm_capacity_frac",
+                   "n_requests": N_REQUESTS, "rate_rps": RATE,
+                   "results": grid}, f, indent=1)
+    out.append(row("kvpage_json", 0.0, f"wrote {path} ({len(grid)} points)"))
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

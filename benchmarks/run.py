@@ -13,6 +13,7 @@ MODULES = [
     "reasoning",         # Fig. 8
     "rag_placement",     # Fig. 9
     "kv_storage",        # Fig. 15
+    "kv_paging",         # paged allocator: block x preemption x tier sweep
     "scaling_clients",   # Fig. 13
     "disaggregation",    # SII-B global/local + SIII-B2 transfer granularity
     "chunk_sweep",       # Fig. 6 chunk axis / Sarathi trade-off

@@ -65,7 +65,8 @@ class Client:
     def load(self, metric: str = "queue") -> float:
         sched = self.scheduler
         waiting = list(getattr(sched, "waiting", []))
-        running = list(getattr(sched, "running", []))
+        running = (list(getattr(sched, "running", []))
+                   + list(getattr(sched, "swapped", [])))
         if metric == "queue":
             return len(waiting) + len(running)
         if metric == "input_len":
@@ -73,13 +74,27 @@ class Client:
         if metric == "output_len":
             return sum(r.output_tokens for r in waiting + running)
         if metric == "kv_size":
-            mm = getattr(sched, "memory", None)
-            return mm.used if mm else 0.0
+            kv = getattr(sched, "kv", None)
+            return kv.used if kv is not None else 0.0
+        if metric == "kv_pressure":
+            # fragmentation-aware: resident blocks (slack included) plus the
+            # block demand parked in the queue, as a fraction of the pool
+            kv = getattr(sched, "kv", None)
+            if kv is None:
+                return float(len(waiting) + len(running))
+            queued = sum(kv.blocks_for_tokens(r.input_tokens + r.rag_tokens)
+                         for r in waiting)
+            return (kv.used_blocks + queued) / max(1, kv.num_blocks)
         if metric == "tokens_remaining":
             return sum(r.remaining_tokens + max(
                 0, r.effective_prefill_tokens - r.prefilled_tokens)
                 for r in waiting + running)
         raise ValueError(metric)
+
+    def kv_stats(self) -> Dict:
+        """Paged-allocator counters (empty for non-LLM clients)."""
+        kv = getattr(self.scheduler, "kv", None)
+        return kv.stats() if kv is not None else {}
 
 
 class PreprocessClient(Client):

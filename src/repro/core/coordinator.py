@@ -108,6 +108,22 @@ class Coordinator:
                         (client.name, step))
 
     # ------------------------------------------------------------------
+    def _account_swap_traffic(self, client: Client, step, now: float):
+        """KV-page swap traffic from preemptions (paper §III-E3). The
+        engine's stall is already priced inside the step duration (Eq. 1
+        tier term); here the bytes are counted in the metrics and recorded
+        against the client's dedicated spill link so ``Network.stats()``
+        reports per-client swap volume. (The spill link is private to the
+        client — host-side contention with other traffic is not modeled.)"""
+        nbytes = getattr(step, "swap_bytes", 0.0)
+        if nbytes <= 0:
+            return
+        self.metrics.observe_step_swaps(step)
+        if self.network.paths.get((client.name, f"{client.name}:kvpool")):
+            self.network.transfer(client.name, f"{client.name}:kvpool",
+                                  nbytes, now)
+
+    # ------------------------------------------------------------------
     def _transfer_and_forward(self, req: rq.Request, src: str, now: float):
         """Price inter-stage data movement, then re-enqueue as a new request
         event at the destination (paper §III-B2)."""
@@ -174,6 +190,7 @@ class Coordinator:
                 if client.failed:
                     continue
                 finished = client.finish_step(step, now)
+                self._account_swap_traffic(client, step, now)
                 for req in finished:
                     req.advance_stage(now)
                     if req.done:
@@ -200,6 +217,7 @@ class Coordinator:
             elif kind == ev.CLIENT_REMOVE:
                 self._on_remove(event.payload, now)
 
+        self.metrics.collect_kv(self.clients.values())
         return self.metrics
 
     # ------------------------------------------------------------------
@@ -218,6 +236,7 @@ class Coordinator:
         client = self.clients.pop(name, None)
         if client is None:
             return
+        self.metrics.retire_client_kv(client)
         self._active_step.pop(name, None)
         for req in client.drain():
             self._dispatch(req, now)
@@ -238,9 +257,10 @@ class Coordinator:
                 others = [c for c in cands if c is not client]
                 if not others:
                     continue
-                waiting.remove(r)
-                sched.admitted_bytes.pop(r.rid, None) if hasattr(
-                    sched, "admitted_bytes") else None
+                if hasattr(sched, "remove_waiting"):
+                    sched.remove_waiting(r)   # frees any pages it held
+                else:
+                    waiting.remove(r)
                 r.preemptions += 1
                 self._dispatch(r, now)
 

@@ -1,7 +1,12 @@
 """vLLM-style LLM scheduler with the paper's five batching strategies
 (§III-D1): static, continuous, chunked, mixed, disaggregated (prefill_only /
-decode_only halves), plus FCFS / least-work-left packing and KV-memory
-admission control with preemption.
+decode_only halves), plus FCFS / least-work-left packing.
+
+KV memory is managed by the paged allocator (``core/memory.py``): admission
+reserves whole-context block tables, decode growth faults in blocks one at a
+time, and exhaustion is resolved by a pluggable preemption policy —
+``swap`` (offload the coldest request's pages to the next tier, priced with
+the Eq. 1 tier term) or ``recompute`` (drop pages, re-enqueue the prefill).
 """
 from __future__ import annotations
 
@@ -9,13 +14,15 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.memory import MemoryManager
+from repro.core.memory import PagedKVAllocator, tier_transfer_time
 from repro.core.request import Request
 from repro.perfmodel import analytical as ana
-from repro.perfmodel.hardware import ClusterSpec
+from repro.perfmodel.hardware import CacheTierSpec, ClusterSpec, \
+    DEFAULT_SWAP_TIERS
 
 STRATEGIES = ("static", "continuous", "chunked", "mixed",
               "prefill_only", "decode_only")
+PREEMPTION_POLICIES = ("swap", "recompute")
 
 
 @dataclass(frozen=True)
@@ -23,6 +30,11 @@ class SchedulerLimits:
     max_batch: int = 64
     max_prefill_tokens: int = 8192     # prefill token budget per step
     chunk_size: int = 512              # chunked-batching token budget
+    # paged KV allocator knobs
+    kv_block_tokens: int = 32          # tokens per KV page
+    preemption: str = "swap"           # swap | recompute
+    kv_capacity_frac: float = 1.0      # scale usable HBM (capacity studies)
+    swap_tiers: Tuple[CacheTierSpec, ...] = DEFAULT_SWAP_TIERS
 
 
 @dataclass
@@ -33,6 +45,10 @@ class LLMStep:
     duration: float = 0.0
     energy: float = 0.0
     flops: float = 0.0
+    # KV paging traffic attributed to this step (set at plan/finish time)
+    swap_bytes: float = 0.0
+    swap_time: float = 0.0
+    preemptions: int = 0
 
     @property
     def n_tokens(self) -> int:
@@ -86,6 +102,7 @@ class LLMScheduler:
                  limits: SchedulerLimits = SchedulerLimits(),
                  packing: str = "fcfs"):
         assert strategy in STRATEGIES, strategy
+        assert limits.preemption in PREEMPTION_POLICIES, limits.preemption
         self.strategy = strategy
         self.cfg = model_cfg
         self.cluster = cluster
@@ -94,15 +111,26 @@ class LLMScheduler:
         self.packing = packing
         self.waiting: List[Request] = []
         self.running: List[Request] = []
+        self.swapped: List[Request] = []   # preempted-to-tier, awaiting swap-in
         self.chunk_progress: Dict[int, int] = {}   # rid -> prefilled tokens
         self.static_batch: List[Request] = []
-        self.admitted_bytes: Dict[int, float] = {}  # rid -> KV bytes held
         weights = model_cfg.param_count() * ana.BYTES_PER_PARAM / cluster.tp
-        self.memory = MemoryManager(
-            capacity=max(cluster.total_mem - weights * cluster.n_chips / max(
-                1, cluster.tp) * cluster.tp, cluster.total_mem * 0.15))
+        capacity = max(cluster.total_mem - weights * cluster.n_chips / max(
+            1, cluster.tp) * cluster.tp, cluster.total_mem * 0.15)
         self.kv_per_token = ana.kv_bytes_per_token(model_cfg) + (
             ana.ssm_state_bytes(model_cfg) / 4096.0)
+        self.kv = PagedKVAllocator(
+            capacity * limits.kv_capacity_frac, self.kv_per_token,
+            block_tokens=limits.kv_block_tokens,
+            swap_tiers=limits.swap_tiers)
+        # swap traffic incurred inside finish_step, charged to the NEXT step
+        self._pending_swap_bytes = 0.0
+        self._pending_swap_time = 0.0
+        self._pending_preemptions = 0
+        # decode_only victims of recompute preemption: their KV must be
+        # re-fetched (a decode replica cannot re-run prefill), priced on
+        # re-admission like a swap-in from the first spill tier
+        self._needs_refetch: set = set()
         # scheduler-level metrics (paper §III-F2)
         self.history: List[Dict] = []
         self.total_energy = 0.0
@@ -112,25 +140,45 @@ class LLMScheduler:
     def add(self, req: Request):
         if self.strategy == "decode_only":
             # KV produced by the prefill client arrives with the request
-            nbytes = req.total_context * self.kv_per_token
-            self.memory.admit(nbytes)
-            self.admitted_bytes[req.rid] = nbytes
-            if req.decoded_tokens == 0:
-                req.decoded_tokens = 1   # disagg prefill emitted token #1
-            self.running.append(req)
+            if self._admit_decode(req):
+                self.running.append(req)
+            else:
+                self.waiting.append(req)
         else:
             self.waiting.append(req)
         if self.packing == "least_work":
             self.waiting.sort(key=lambda r: r.effective_prefill_tokens
                               + r.remaining_tokens)
 
+    def _admit_decode(self, req: Request) -> bool:
+        if not self.kv.allocate(req.rid, req.total_context,
+                                force=self._oversized(req.total_context)):
+            return False
+        if req.rid in self._needs_refetch:
+            self._needs_refetch.discard(req.rid)
+            nbytes = req.total_context * self.kv_per_token
+            self._pending_swap_bytes += nbytes
+            if self.kv.tiers:
+                self._pending_swap_time += tier_transfer_time(
+                    nbytes, self.kv.tiers[0].spec)
+        if req.decoded_tokens == 0:
+            req.decoded_tokens = 1   # disagg prefill emitted token #1
+        return True
+
+    def _oversized(self, tokens: int) -> bool:
+        """A context bigger than the entire pool can never be admitted by
+        backpressure alone — overcommit it (counted) so the system stays
+        live, matching real engines' max-model-len escape valves."""
+        return self.kv.blocks_for_tokens(tokens) > self.kv.num_blocks
+
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running or self.static_batch)
+        return bool(self.waiting or self.running or self.static_batch
+                    or self.swapped)
 
     # ------------------------------------------------------------------
     def _admit_prefills(self, token_budget: int, batch_budget: int
                         ) -> List[Tuple[Request, int]]:
-        """Admit whole-request prefills under budgets + memory."""
+        """Admit whole-request prefills under budgets + paged KV memory."""
         out = []
         used = 0
         while self.waiting and len(out) < batch_budget:
@@ -138,27 +186,144 @@ class LLMScheduler:
             toks = r.effective_prefill_tokens
             if out and used + toks > token_budget:
                 break
-            kv = (r.input_tokens + r.rag_tokens) * self.kv_per_token
-            if not self.memory.admit(kv):
+            # decoded_tokens > 0 happens on re-admission after a recompute
+            # preemption: the regenerated KV occupies slots again
+            ctx = r.input_tokens + r.rag_tokens + r.decoded_tokens
+            if not self.kv.allocate(r.rid, ctx, force=self._oversized(ctx)):
                 break
-            self.admitted_bytes[r.rid] = kv
             self.waiting.pop(0)
             out.append((r, toks))
             used += toks
         return out
 
     def plan_step(self) -> Optional[LLMStep]:
+        self._try_swap_in()
         s = self.strategy
         if s in ("continuous", "prefill_only", "mixed"):
-            return self._plan_continuous(mixed=(s == "mixed"),
+            step = self._plan_continuous(mixed=(s == "mixed"),
                                          prefill_only=(s == "prefill_only"))
-        if s == "decode_only":
-            return self._plan_decode_only()
-        if s == "chunked":
-            return self._plan_chunked()
-        if s == "static":
-            return self._plan_static()
-        raise ValueError(s)
+        elif s == "decode_only":
+            step = self._plan_decode_only()
+        elif s == "chunked":
+            step = self._plan_chunked()
+        elif s == "static":
+            step = self._plan_static()
+        else:
+            raise ValueError(s)
+        if step is not None:
+            self._attach_pending_swaps(step)
+        return step
+
+    def _attach_pending_swaps(self, step: LLMStep):
+        """Charge swap traffic (from preemptions and swap-ins) to this step:
+        the engine stalls at idle power while pages cross the tier boundary."""
+        if self._pending_swap_time > 0 or self._pending_swap_bytes > 0 \
+                or self._pending_preemptions:
+            step.swap_bytes += self._pending_swap_bytes
+            step.swap_time += self._pending_swap_time
+            step.duration += self._pending_swap_time
+            step.preemptions += self._pending_preemptions
+            step.energy += ana.idle_stall_energy(self._pending_swap_time,
+                                                 self.cluster)
+            self._pending_swap_bytes = 0.0
+            self._pending_swap_time = 0.0
+            self._pending_preemptions = 0
+
+    def _try_swap_in(self):
+        """Resume swapped-out requests oldest-first, keeping one block of
+        headroom per running request to avoid swap ping-pong. When nothing
+        else is active the headroom is waived so the system stays live."""
+        while self.swapped:
+            r = self.swapped[0]
+            need = len(self.kv.tables[r.rid].blocks)
+            headroom = len(self.running) if (self.running or self.waiting) else 0
+            if need + headroom > self.kv.free_blocks:
+                break
+            res = self.kv.swap_in(r.rid)
+            if res is None:
+                break
+            nbytes, t = res
+            self._pending_swap_bytes += nbytes
+            self._pending_swap_time += t
+            self.swapped.pop(0)
+            if self.strategy == "static":
+                self.static_batch.append(r)
+            else:
+                self.running.append(r)
+
+    # --- preemption ----------------------------------------------------
+    def _preemptable(self, exclude: Request) -> Optional[Request]:
+        """Coldest victim = the most recently admitted request (LIFO), so the
+        oldest request always keeps its pages and the system stays live.
+        Finished requests (no pages to reclaim usefully, must not re-enter
+        the queues) are never victims."""
+        for pool in (self.running, self.static_batch):
+            for r in reversed(pool):
+                if r is not exclude and r.remaining_tokens > 0 \
+                        and self.kv.holds(r.rid):
+                    return r
+        return None
+
+    def _preempt_one(self, grower: Request) -> bool:
+        """Evict one victim to make room for ``grower``. Returns False when
+        nobody but ``grower`` holds pages."""
+        # a finished static-batch member still holds pages until the batch
+        # drains — reclaim those first, in place, so it never lands in
+        # swapped/waiting (where a done request would stall _plan_static)
+        for r in self.static_batch:
+            if r is not grower and r.remaining_tokens <= 0 \
+                    and self.kv.holds(r.rid):
+                self.kv.free(r.rid)
+                return True
+        victim = self._preemptable(exclude=grower)
+        if victim is None:
+            # last resort: a queued chunked request holding partial pages
+            for r in reversed(self.waiting):
+                if r is not grower and self.kv.holds(r.rid):
+                    self.kv.drop(r.rid)
+                    r.prefilled_tokens = 0
+                    self.chunk_progress.pop(r.rid, None)
+                    r.preemptions += 1
+                    self._pending_preemptions += 1
+                    return True
+            return False
+        victim.preemptions += 1
+        self._pending_preemptions += 1
+        if self.limits.preemption == "swap":
+            res = self.kv.swap_out(victim.rid)
+            if res is not None:
+                nbytes, t = res
+                self._pending_swap_bytes += nbytes
+                self._pending_swap_time += t
+                self._remove_from_pools(victim)
+                self.swapped.append(victim)
+                return True
+            # spill tiers full: degrade to recompute
+        self.kv.drop(victim.rid)
+        victim.prefilled_tokens = 0
+        self.chunk_progress.pop(victim.rid, None)
+        if self.strategy == "decode_only":
+            self._needs_refetch.add(victim.rid)
+        self._remove_from_pools(victim)
+        self.waiting.insert(0, victim)
+        return True
+
+    def _remove_from_pools(self, r: Request):
+        for pool in (self.running, self.static_batch):
+            if r in pool:
+                pool.remove(r)
+
+    def _grow(self, r: Request) -> bool:
+        """Decode growth with preemption: returns False only when ``r`` was
+        itself preempted (recompute) and must not emit a token this step."""
+        while not self.kv.append_tokens(r.rid, r.branches):
+            if not self._preempt_one(r):
+                # r alone holds the pool (oversized request): overcommit
+                self.kv.append_tokens(r.rid, r.branches, force=True)
+                return True
+            if not self.kv.holds(r.rid) or not self.kv.tables[r.rid].on_device:
+                return False   # r lost its own pages to the policy
+        return True
 
     # --- continuous / mixed / prefill-only ----------------------------
     def _plan_continuous(self, mixed: bool, prefill_only: bool) -> Optional[LLMStep]:
@@ -188,6 +353,13 @@ class LLMScheduler:
 
     # --- pure decode (disaggregated decode client) ---------------------
     def _plan_decode_only(self) -> Optional[LLMStep]:
+        # admit arrivals that found the pool full at add()
+        while self.waiting:
+            r = self.waiting[0]
+            if not self._admit_decode(r):
+                break
+            self.waiting.pop(0)
+            self.running.append(r)
         if not self.running:
             return None
         dec = self.running[: self.limits.max_batch]
@@ -203,11 +375,11 @@ class LLMScheduler:
         while budget > 0 and self.waiting:
             r = self.waiting[0]
             done = self.chunk_progress.get(r.rid, 0)
-            if done == 0:
-                kv = (r.input_tokens + r.rag_tokens) * self.kv_per_token
-                if not self.memory.admit(kv):
+            if done == 0 and not self.kv.holds(r.rid):
+                ctx = r.input_tokens + r.rag_tokens + r.decoded_tokens
+                if not self.kv.allocate(r.rid, ctx,
+                                        force=self._oversized(ctx)):
                     break
-                self.admitted_bytes[r.rid] = kv
             remaining = r.effective_prefill_tokens - done
             take = min(remaining, budget)
             pre.append((r, take))
@@ -267,55 +439,72 @@ class LLMScheduler:
                     self.total_tokens += 1
                 if self.strategy == "prefill_only":
                     finished.append(r)  # hand off to the decode client
+                    self.kv.free(r.rid)  # KV ships to the decode client
                 elif r.remaining_tokens <= 0:
                     finished.append(r)
-                    self._release(r)
+                    self.kv.free(r.rid)
                 elif self.strategy != "static":
                     self.running.append(r)
         for r in step.decode:
             if r.remaining_tokens <= 0:
                 continue
+            if not self.kv.holds(r.rid) or not self.kv.tables[r.rid].on_device:
+                continue   # preempted earlier in this very step
+            if not self._grow(r):
+                continue   # recompute-preempted itself; token not emitted
             r.decoded_tokens += 1
             if r.first_token_time is None:
                 r.first_token_time = now
             r.last_token_time = now
             r.token_times.append(now)
             self.total_tokens += r.branches
-            self.memory.grow(self.kv_per_token * r.branches)
-            self.admitted_bytes[r.rid] = self.admitted_bytes.get(r.rid, 0.0) \
-                + self.kv_per_token * r.branches
             if r.remaining_tokens <= 0 and self.strategy != "static":
                 finished.append(r)
-                self._release(r)
-                self.running.remove(r)
+                self.kv.free(r.rid)
+                if r in self.running:
+                    self.running.remove(r)
         if self.strategy == "static" and self.static_batch and \
                 all(r.remaining_tokens <= 0 for r in self.static_batch):
             for r in self.static_batch:
                 finished.append(r)
-                self._release(r)
+                self.kv.free(r.rid)
             self.static_batch = []
         self.history.append({
             "time": now, "queue": len(self.waiting), "running": len(self.running),
-            "mem_used": self.memory.used, "step_tokens": step.n_tokens,
-            "kind": step.kind,
+            "swapped": len(self.swapped), "mem_used": self.kv.used,
+            "kv_util": self.kv.used_blocks / max(1, self.kv.num_blocks),
+            "step_tokens": step.n_tokens, "kind": step.kind,
         })
         return finished
-
-    def _release(self, r: Request):
-        self.memory.release(self.admitted_bytes.pop(r.rid, 0.0))
 
     # --- fault tolerance ------------------------------------------------
     def drain(self) -> List[Request]:
         """Client failure: return every in-flight request for re-dispatch.
         KV state is lost; prefill restarts (paper-scale systems re-prefill)."""
-        out = list(self.waiting) + list(self.running) + list(self.static_batch)
+        out = (list(self.waiting) + list(self.running)
+               + list(self.static_batch) + list(self.swapped))
         for r in out:
+            self.kv.free(r.rid)
             r.prefilled_tokens = 0
             if r.decoded_tokens > 1:
                 r.decoded_tokens = max(1, r.decoded_tokens)  # keep emitted tokens
             r.failures += 1
         self.waiting, self.running, self.static_batch = [], [], []
+        self.swapped = []
         self.chunk_progress.clear()
-        self.admitted_bytes.clear()
-        self.memory.used = 0.0
+        self._needs_refetch.clear()
+        self.kv.check_invariants()
         return out
+
+    def remove_waiting(self, r: Request) -> bool:
+        """Straggler rescue: pull a queued request and release any pages it
+        already holds (chunked admission allocates at first touch). Partial
+        prefill progress dies with the pages — the new client restarts it."""
+        if r not in self.waiting:
+            return False
+        self.waiting.remove(r)
+        self.kv.free(r.rid)
+        self.chunk_progress.pop(r.rid, None)
+        self._needs_refetch.discard(r.rid)
+        r.prefilled_tokens = 0
+        return True

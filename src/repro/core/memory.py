@@ -1,15 +1,43 @@
-"""Multi-level KV-cache retrieval hierarchy (paper §III-E3, Eq. 1).
+"""Paged, tiered KV-cache subsystem (paper §III-D admission control +
+§III-E3 multi-level retrieval, Eq. 1).
 
-    f(KV, C_n) = Hit_n * (T_lookup_n + Size_KV / BW_n)
-               + (1 - Hit_n) * f(KV, C_{n+1})
+Two layers live here:
 
-A miss below the last level falls back to ``miss_cost`` — typically prefill
-recomputation (priced by the analytical model) or a DCN fetch.
+1. **Retrieval pricing (Eq. 1).** ``expected_retrieval_latency`` /
+   ``sample_retrieval_latency`` evaluate the paper's recursive cache-lookup
+   model over a ``CacheTierSpec`` chain:
+
+       f(KV, C_n) = Hit_n * (T_lookup_n + Size_KV / BW_n)
+                  + (1 - Hit_n) * f(KV, C_{n+1})
+
+   A miss below the last level falls back to ``miss_cost`` — typically
+   prefill recomputation (priced by the analytical model) or a DCN fetch.
+
+2. **On-device allocation (``PagedKVAllocator``).** The same tier specs that
+   parameterize Eq. 1 back the on-device allocator's spill hierarchy, so the
+   analytical model and the discrete-event scheduler agree on bandwidths:
+
+   * HBM is carved into fixed-size *blocks* of ``block_tokens`` KV slots;
+     each request owns a *block table* (ordered list of physical block ids).
+     Admission reserves whole blocks; decode growth faults in one block at a
+     time; release returns blocks to a free list — O(1) each, no compaction.
+   * When decode growth faults with an empty free list, a *preemption policy*
+     makes room:
+       - ``swap``      — the victim's pages move to the next tier down
+                         (host DRAM → remote). The traffic is priced with the
+                         tier term of Eq. 1 (``T_lookup + bytes / BW``) and,
+                         at the coordinator, occupies ``Network`` links.
+       - ``recompute`` — the victim's pages are dropped and its prefill
+                         re-enqueued; cost resurfaces as recomputed prefill
+                         FLOPs instead of wire bytes.
+   * Internal fragmentation (allocated-but-unfilled token slots in each
+     request's last block) is tracked and exported through ``stats()`` so
+     routers can balance on real, fragmentation-aware KV pressure.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,30 +67,257 @@ def sample_retrieval_latency(size_bytes: float, tiers: Sequence[CacheTierSpec],
     return lat + miss_cost
 
 
+def tier_transfer_time(nbytes: float, tier: CacheTierSpec) -> float:
+    """One deterministic traversal of a tier boundary (Eq. 1 hit term).
+    Used to price swap-out/swap-in; delegates to the spec so the allocator,
+    the analytical model and the retrieval client share one formula."""
+    return tier.transfer_time(nbytes)
+
+
+# ---------------------------------------------------------------------------
+# tier accounting
+# ---------------------------------------------------------------------------
+
+DEVICE_TIER = 0   # block-table ``tier`` value for pages resident in HBM
+
+
 @dataclass
-class MemoryManager:
-    """On-device KV memory for an LLM client (paper §III-D: the scheduler
-    prevents admission when KV memory is insufficient and evicts on
-    completion)."""
-    capacity: float
+class KVTierState:
+    """Mutable byte accounting over one spill level (host DRAM, remote...)."""
+    spec: CacheTierSpec
     used: float = 0.0
     peak: float = 0.0
-    admission_failures: int = 0
 
-    def can_admit(self, nbytes: float) -> bool:
-        return self.used + nbytes <= self.capacity
+    def has_room(self, nbytes: float) -> bool:
+        return self.used + nbytes <= self.spec.capacity
 
-    def admit(self, nbytes: float) -> bool:
-        if not self.can_admit(nbytes):
-            self.admission_failures += 1
-            return False
-        self.used += nbytes
-        self.peak = max(self.peak, self.used)
-        return True
-
-    def grow(self, nbytes: float):
+    def reserve(self, nbytes: float):
         self.used += nbytes
         self.peak = max(self.peak, self.used)
 
     def release(self, nbytes: float):
         self.used = max(0.0, self.used - nbytes)
+
+
+@dataclass
+class BlockTable:
+    """Per-request page map: which physical blocks hold this request's KV."""
+    rid: int
+    blocks: List[int] = field(default_factory=list)
+    tokens: int = 0            # KV token slots actually filled
+    tier: int = DEVICE_TIER    # DEVICE_TIER, or 1-based index into spill tiers
+
+    @property
+    def on_device(self) -> bool:
+        return self.tier == DEVICE_TIER
+
+
+# ---------------------------------------------------------------------------
+# paged allocator
+# ---------------------------------------------------------------------------
+
+class PagedKVAllocator:
+    """Fixed-size-block KV allocator over an HBM pool with spill tiers.
+
+    All admission/growth/release in ``LLMScheduler`` goes through this; the
+    free list is the single source of truth for device KV occupancy.
+    """
+
+    def __init__(self, capacity_bytes: float, bytes_per_token: float,
+                 block_tokens: int = 32,
+                 swap_tiers: Sequence[CacheTierSpec] = ()):
+        assert block_tokens >= 1
+        self.block_tokens = int(block_tokens)
+        self.bytes_per_token = float(bytes_per_token)
+        self.block_bytes = self.block_tokens * self.bytes_per_token
+        self.num_blocks = max(1, int(capacity_bytes // max(self.block_bytes, 1.0)))
+        self.capacity = self.num_blocks * self.block_bytes
+        self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self.tables: Dict[int, BlockTable] = {}
+        self.tiers: List[KVTierState] = [KVTierState(s) for s in swap_tiers]
+        # overcommit escape hatch: requests larger than the whole pool get
+        # "overflow" blocks with ids >= num_blocks (counted, never recycled
+        # into the free list) so the simulation stays live and the pressure
+        # is visible as utilization > 1 instead of a hard failure
+        self._next_overflow_id = self.num_blocks
+        self._overflow_live = 0
+        self.overcommitted_blocks = 0  # cumulative
+        # counters (surfaced via stats() -> MetricsCollector)
+        self.page_faults = 0           # growth attempts that found no free block
+        self.admission_failures = 0
+        self.evictions = 0             # swap-out events
+        self.swap_ins = 0
+        self.swap_bytes_out = 0.0
+        self.swap_bytes_in = 0.0
+        self.recompute_drops = 0
+        self.peak_blocks = 0
+
+    # -- capacity queries ---------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free) + self._overflow_live
+
+    @property
+    def used(self) -> float:
+        """Device bytes held (block-granular, fragmentation included)."""
+        return self.used_blocks * self.block_bytes
+
+    def blocks_for_tokens(self, tokens: int) -> int:
+        return max(0, -(-int(tokens) // self.block_tokens))
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.blocks_for_tokens(tokens) <= len(self._free)
+
+    def fragmentation_bytes(self) -> float:
+        """Allocated-but-unfilled token slots across resident block tables."""
+        slack = 0.0
+        for t in self.tables.values():
+            if t.on_device:
+                slack += len(t.blocks) * self.block_tokens - t.tokens
+        return slack * self.bytes_per_token
+
+    # -- allocation / growth / release --------------------------------------
+    def _take(self, n: int, force: bool = False) -> List[int]:
+        real = min(n, len(self._free))
+        got = [self._free.pop() for _ in range(real)]
+        if n > real:
+            assert force
+            got.extend(range(self._next_overflow_id,
+                             self._next_overflow_id + n - real))
+            self._next_overflow_id += n - real
+            self._overflow_live += n - real
+            self.overcommitted_blocks += n - real
+        self.peak_blocks = max(self.peak_blocks, self.used_blocks)
+        return got
+
+    def _give_back(self, blocks: List[int]) -> int:
+        """Return device blocks to the free list; retire overflow ids."""
+        real = [b for b in blocks if b < self.num_blocks]
+        self._free.extend(real)
+        self._overflow_live -= len(blocks) - len(real)
+        return len(real)
+
+    def allocate(self, rid: int, tokens: int, force: bool = False) -> bool:
+        """Whole-context admission (prefill): reserve ceil(tokens/B) blocks.
+        ``force`` overcommits instead of failing (requests bigger than the
+        entire pool — the caller decides, normal backpressure stays intact)."""
+        assert rid not in self.tables, f"double allocation for rid={rid}"
+        need = self.blocks_for_tokens(tokens)
+        if need > len(self._free) and not force:
+            self.admission_failures += 1
+            return False
+        self.tables[rid] = BlockTable(rid, self._take(need, force), int(tokens))
+        return True
+
+    def append_tokens(self, rid: int, n: int = 1, force: bool = False) -> bool:
+        """Decode growth: extend by ``n`` token slots, faulting in new blocks
+        as needed. Returns False (and counts a page fault) on exhaustion; the
+        caller resolves it through its preemption policy, falling back to
+        ``force`` when no victim exists."""
+        t = self.tables[rid]
+        assert t.on_device, f"growing swapped-out rid={rid}"
+        need = self.blocks_for_tokens(t.tokens + n) - len(t.blocks)
+        if need > len(self._free) and not force:
+            self.page_faults += 1
+            return False
+        if need > 0:
+            t.blocks.extend(self._take(need, force))
+        t.tokens += n
+        return True
+
+    def free(self, rid: int) -> int:
+        """Release every page of a request (completion/drop). Returns the
+        number of device blocks returned to the free list."""
+        t = self.tables.pop(rid, None)
+        if t is None:
+            return 0
+        if t.on_device:
+            return self._give_back(t.blocks)
+        self.tiers[t.tier - 1].release(len(t.blocks) * self.block_bytes)
+        return 0
+
+    def holds(self, rid: int) -> bool:
+        return rid in self.tables
+
+    # -- preemption: swap ----------------------------------------------------
+    def swap_out(self, rid: int) -> Optional[Tuple[float, float]]:
+        """Offload a resident request's pages to the first spill tier with
+        room. Returns (bytes_moved, transfer_time) or None when no tier can
+        take them (caller falls back to recompute)."""
+        t = self.tables[rid]
+        assert t.on_device
+        if len(t.blocks) > self.num_blocks:
+            return None   # could never swap back in; caller recomputes
+        nbytes = len(t.blocks) * self.block_bytes
+        for i, tier in enumerate(self.tiers, start=1):
+            if tier.has_room(nbytes):
+                tier.reserve(nbytes)
+                self._give_back(t.blocks)
+                t.blocks = [-1] * len(t.blocks)   # physical ids are tier-side
+                t.tier = i
+                self.evictions += 1
+                self.swap_bytes_out += nbytes
+                return nbytes, tier_transfer_time(nbytes, tier.spec)
+        return None
+
+    def swap_in(self, rid: int) -> Optional[Tuple[float, float]]:
+        """Bring a swapped request's pages back to HBM. Returns
+        (bytes_moved, transfer_time) or None when HBM lacks free blocks."""
+        t = self.tables[rid]
+        assert not t.on_device
+        n = len(t.blocks)
+        if n > len(self._free):
+            return None
+        tier = self.tiers[t.tier - 1]
+        nbytes = n * self.block_bytes
+        tier.release(nbytes)
+        t.blocks = self._take(n)
+        t.tier = DEVICE_TIER
+        self.swap_ins += 1
+        self.swap_bytes_in += nbytes
+        return nbytes, tier_transfer_time(nbytes, tier.spec)
+
+    # -- preemption: recompute ----------------------------------------------
+    def drop(self, rid: int) -> int:
+        """Discard a request's pages entirely (recompute preemption)."""
+        released = self.free(rid)
+        self.recompute_drops += 1
+        return released
+
+    # -- reporting -----------------------------------------------------------
+    def check_invariants(self):
+        """Free list and block tables must partition [0, num_blocks); live
+        overflow ids must match the overflow counter."""
+        held = [b for t in self.tables.values() if t.on_device
+                for b in t.blocks if b < self.num_blocks]
+        overflow = sum(1 for t in self.tables.values() if t.on_device
+                       for b in t.blocks if b >= self.num_blocks)
+        all_ids = sorted(self._free + held)
+        assert all_ids == list(range(self.num_blocks)), \
+            "block leak or double allocation"
+        assert overflow == self._overflow_live, "overflow accounting drift"
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "num_blocks": self.num_blocks,
+            "used_blocks": self.used_blocks,
+            "free_blocks": self.free_blocks,
+            "peak_blocks": self.peak_blocks,
+            "block_tokens": self.block_tokens,
+            "utilization": self.used_blocks / max(1, self.num_blocks),
+            "fragmentation_bytes": self.fragmentation_bytes(),
+            "page_faults": self.page_faults,
+            "admission_failures": self.admission_failures,
+            "evictions": self.evictions,
+            "swap_ins": self.swap_ins,
+            "swap_bytes_out": self.swap_bytes_out,
+            "swap_bytes_in": self.swap_bytes_in,
+            "recompute_drops": self.recompute_drops,
+            "overflow_blocks": self._overflow_live,
+            "overcommitted_blocks": self.overcommitted_blocks,
+            "tier_used_bytes": {t.spec.name: t.used for t in self.tiers},
+        }

@@ -41,12 +41,53 @@ class MetricsCollector:
         self.dropped: List[Request] = []
         self.comm_events: int = 0
         self.comm_bytes: float = 0.0
+        # KV paging (paper §III-D admission control + §III-E3 tiering):
+        # wire-side swap traffic observed by the coordinator ...
+        self.swap_events: int = 0
+        self.swap_bytes: float = 0.0
+        # ... and allocator counters aggregated over clients at run() end
+        # (clients retired mid-run fold into _kv_retired so their history
+        # survives removal; collect_kv recomputes, so it is idempotent)
+        _zero = {"page_faults": 0, "admission_failures": 0, "evictions": 0,
+                 "swap_ins": 0, "swap_bytes_out": 0.0, "swap_bytes_in": 0.0,
+                 "recompute_drops": 0, "peak_blocks": 0}
+        self.kv: Dict[str, float] = dict(_zero)
+        self._kv_retired: Dict[str, float] = dict(_zero)
 
     def complete(self, req: Request):
         self.serviced.append(req)
 
     def drop(self, req: Request):
         self.dropped.append(req)
+
+    def observe_step_swaps(self, step):
+        """Per-step wire traffic from swap/recompute preemptions."""
+        nbytes = getattr(step, "swap_bytes", 0.0)
+        if nbytes > 0:
+            self.swap_events += 1
+            self.swap_bytes += nbytes
+
+    @staticmethod
+    def _fold_kv(totals: Dict[str, float], stats: Dict):
+        for k in totals:
+            if k == "peak_blocks":
+                totals[k] = max(totals[k], stats.get(k, 0))
+            else:
+                totals[k] += stats.get(k, 0)
+
+    def retire_client_kv(self, client):
+        """Preserve a removed client's allocator counters before it is
+        dropped from the coordinator's client map."""
+        stats = client.kv_stats() if hasattr(client, "kv_stats") else {}
+        self._fold_kv(self._kv_retired, stats)
+
+    def collect_kv(self, clients):
+        """Recompute run totals from retired + live clients (idempotent)."""
+        totals = dict(self._kv_retired)
+        for c in clients:
+            self._fold_kv(totals, c.kv_stats() if hasattr(c, "kv_stats")
+                          else {})
+        self.kv = totals
 
     # ------------------------------------------------------------------
     @property
@@ -95,6 +136,11 @@ class MetricsCollector:
         if total_energy > 0:
             s["energy_j"] = total_energy
             s["tok_per_joule"] = s["tokens"] / total_energy
+        s["preemptions"] = sum(r.preemptions for r in self.serviced)
+        s["swap_events"] = self.swap_events
+        s["swap_bytes"] = self.swap_bytes
+        for k, v in self.kv.items():
+            s[f"kv_{k}"] = v
         if slo is not None:
             s["slo_ok"] = self.slo_satisfied(slo)
             s["goodput_tok_s"] = self.goodput(slo, horizon)

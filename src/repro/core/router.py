@@ -12,7 +12,7 @@ from repro.core.client import Client
 from repro.core.request import Request
 
 LOAD_METRICS = ("queue", "input_len", "output_len", "kv_size",
-                "tokens_remaining")
+                "kv_pressure", "tokens_remaining")
 
 
 class Router:

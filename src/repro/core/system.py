@@ -140,6 +140,13 @@ def build_system(spec: SystemSpec) -> Coordinator:
             "kvret0", ClusterSpec(GRACE_CPU, 1, 1), spec.kv_tiers,
             kv_bytes_per_token=kvb, recompute_fn=recompute))
 
+    # each LLM client spills preempted KV pages over its own PCIe path so
+    # swap traffic contends with that client's other host-side transfers
+    for c in clients:
+        if isinstance(c, LLMClient):
+            net.add_link(f"pcie:{c.name}", PCIE4_X4)
+            net.connect(c.name, f"{c.name}:kvpool", [f"pcie:{c.name}"])
+
     router = make_router(spec.router_policy, spec.router_metric)
     coord = Coordinator(clients, router, net, CoordinatorConfig(
         disaggregation=spec.disaggregation,

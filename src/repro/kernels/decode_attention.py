@@ -14,6 +14,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; newer jax renamed it
+_CompilerParams = getattr(pltpu, 'CompilerParams', None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -85,7 +88,7 @@ def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; newer jax renamed it
+_CompilerParams = getattr(pltpu, 'CompilerParams', None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -105,7 +108,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -16,6 +16,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; newer jax renamed it
+_CompilerParams = getattr(pltpu, 'CompilerParams', None) or pltpu.TPUCompilerParams
+
 
 def _pq_kernel(codes_ref, lut_ref, out_ref):
     codes = codes_ref[...].astype(jnp.int32)        # (bn, M)
@@ -44,7 +47,7 @@ def pq_scan(codes, lut, *, block_n: int = 1024, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

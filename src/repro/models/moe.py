@@ -21,7 +21,20 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:                                  # jax >= 0.6 top-level export
+    from jax import shard_map as _shard_map
+    _SHARD_MAP_REP_KW = "check_vma"
+except ImportError:                   # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_REP_KW = "check_rep"
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, check_vma=False):
+    """Version-portable shard_map: newer jax calls the replication-check
+    knob ``check_vma``, 0.4.x calls it ``check_rep``."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_SHARD_MAP_REP_KW: check_vma})
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import Initializer, init_mlp, apply_mlp

@@ -13,7 +13,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.configs.base import ModelConfig
-from repro.perfmodel.hardware import ChipSpec, ClusterSpec
+from repro.perfmodel.hardware import CacheTierSpec, ChipSpec, ClusterSpec
 
 BYTES_PER_PARAM = 2.0  # bf16 weights
 BYTES_KV = 2.0         # bf16 KV cache
@@ -145,6 +145,22 @@ def chunked_step_time(cfg: ModelConfig, cluster: ClusterSpec,
 def embedding_time(embed_cfg: ModelConfig, cluster: ClusterSpec,
                    query_tokens: int) -> StageCost:
     return prefill_time(embed_cfg, cluster, query_tokens, 1)
+
+
+def idle_stall_energy(t: float, cluster: ClusterSpec) -> float:
+    """Energy burned while the engine stalls (KV swaps, bubble time)."""
+    return t * cluster.chip.power * cluster.n_chips * \
+        cluster.chip.idle_power_frac
+
+
+def kv_swap_cost(nbytes: float, tier: CacheTierSpec,
+                 cluster: ClusterSpec) -> StageCost:
+    """One KV page-swap traversal of a spill-tier boundary (paper Eq. 1 hit
+    term). The engine idles while pages move, so energy is the stall at
+    idle power. Composes the two shared primitives the scheduler also uses
+    (``CacheTierSpec.transfer_time`` + ``idle_stall_energy``)."""
+    t = tier.transfer_time(nbytes)
+    return StageCost(t, idle_stall_energy(t, cluster), 0.0, nbytes, "network")
 
 
 def speculative_decode_step(target: ModelConfig, draft: ModelConfig,

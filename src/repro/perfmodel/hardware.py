@@ -82,8 +82,23 @@ class CacheTierSpec:
     bandwidth: float          # bytes/s
     hit_rate: float           # stationary hit probability
 
+    def transfer_time(self, nbytes: float) -> float:
+        """The Eq. 1 hit term (``T_lookup_n + Size_KV / BW_n``) — the single
+        source for pricing one deterministic traversal of this tier."""
+        return self.lookup_latency + nbytes / self.bandwidth
+
 
 # paper §V-B storage tiers
 TIER_LOCAL_LPDDR = CacheTierSpec("per-client-LPDDR", 1e12, 100e-9, 128e9, 0.60)
 TIER_PLATFORM = CacheTierSpec("platform-shared", 4e12, 1e-6, 32e9, 0.80)
 TIER_RACK = CacheTierSpec("rack-shared", 32e12, 10e-6, 2e9, 0.95)
+
+# spill tiers for the on-device paged KV allocator (HBM → host DRAM →
+# remote pool). ``hit_rate`` is 1.0: a swapped page is deterministically
+# where the block table says it is — only the Eq. 1 hit *term*
+# (lookup + bytes/BW) prices the traversal.
+TIER_HOST_DRAM = CacheTierSpec("host-DRAM", 2e12, 1e-6, PCIE5.bandwidth, 1.0)
+TIER_REMOTE_POOL = CacheTierSpec("remote-pool", 64e12, ETH_RACK.latency,
+                                 ETH_RACK.bandwidth, 1.0)
+DEFAULT_SWAP_TIERS: Tuple[CacheTierSpec, ...] = (TIER_HOST_DRAM,
+                                                 TIER_REMOTE_POOL)

@@ -9,13 +9,23 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# Every snippet builds its mesh through compat_make_mesh(..., shrink=True):
+# works across jax versions (no axis_types on 0.4.x) and shrinks the mesh
+# instead of tripping the "mesh requires N devices" assertion when the
+# subprocess ends up with fewer devices than requested (single-host CPU).
+_PRELUDE = """
+    import jax
+    from repro.launch.mesh import compat_make_mesh, mesh_context
+"""
+
 
 def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env["JAX_PLATFORMS"] = "cpu"
-    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+    p = subprocess.run([sys.executable, "-c",
+                        textwrap.dedent(_PRELUDE) + textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=timeout,
                        env=env)
     assert p.returncode == 0, f"stdout={p.stdout}\nstderr={p.stderr}"
@@ -25,12 +35,11 @@ def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
 def test_moe_ep_matches_single_device():
     """Expert-parallel shard_map MoE == single-device MoE numerics."""
     out = _run("""
-        import jax, jax.numpy as jnp, dataclasses, numpy as np
+        import jax.numpy as jnp, dataclasses, numpy as np
         from repro.configs import get_reduced_config
         from repro.models import moe as moe_mod
         from repro.models.layers import Initializer
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((2, 4), ("data", "model"), shrink=True)
         key = jax.random.PRNGKey(0)
         cfg = get_reduced_config("deepseek_v2_lite_16b").replace(
             param_dtype="float32", compute_dtype="float32")
@@ -53,15 +62,15 @@ def test_moe_ep_matches_single_device():
 def test_sharded_train_step_runs_and_matches():
     """pjit'd train step on a (2,2,2) pod mesh == single-device step."""
     out = _run("""
-        import jax, jax.numpy as jnp, numpy as np
+        import jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_reduced_config, SHAPES_BY_NAME
         from repro.models import steps, transformer as tf
         from repro.models.sharding import ShardingRules, tree_specs
         cfg = get_reduced_config("internlm2_20b").replace(
             param_dtype="float32", compute_dtype="float32", remat="none")
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"),
+                                shrink=True)
         rules = ShardingRules(mesh)
         key = jax.random.PRNGKey(0)
         state = steps.init_train_state(cfg, key)
@@ -69,7 +78,7 @@ def test_sharded_train_step_runs_and_matches():
                  "labels": jax.random.randint(jax.random.fold_in(key, 1),
                                               (8, 32), 0, cfg.vocab_size)}
         _, m1 = steps.train_step(state, batch, cfg)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             fn = jax.jit(lambda s, b: steps.train_step(s, b, cfg, rules=rules,
                                                        mesh=mesh))
             _, m2 = fn(state, batch)
@@ -83,10 +92,9 @@ def test_sharded_train_step_runs_and_matches():
 def test_dryrun_single_cell_on_small_mesh():
     """The dry-run machinery end-to-end on an 8-device (2,2,2) mesh."""
     out = _run("""
-        import jax
         from repro.launch import dryrun
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"),
+                                shrink=True)
         from repro.configs import get_reduced_config
         cfg = get_reduced_config("internlm2_20b")
         res = dryrun.run_cell("internlm2_20b", "train_4k", mesh, True,
@@ -97,6 +105,16 @@ def test_dryrun_single_cell_on_small_mesh():
         print("DRYRUN_OK", res["dominant"])
     """, devices=8)
     assert "DRYRUN_OK" in out
+
+
+def test_mesh_shrinks_to_fit_device_count():
+    """shrink=True never requests more devices than exist (1-device run)."""
+    out = _run("""
+        mesh = compat_make_mesh((2, 4), ("data", "model"), shrink=True)
+        assert mesh.devices.size <= jax.device_count(), mesh.shape
+        print("SHRINK_OK", dict(mesh.shape))
+    """, devices=1)
+    assert "SHRINK_OK" in out
 
 
 def test_collective_bytes_parser():

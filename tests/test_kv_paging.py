@@ -1,0 +1,314 @@
+"""Paged KV allocator + preemption: property, regression and integration
+tests for the tiered memory subsystem (paper §III-D / §III-E3)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.llm_scheduler import LLMScheduler, SchedulerLimits
+from repro.core.memory import PagedKVAllocator
+from repro.core.request import DECODE, LLM, Request, Stage
+from repro.core.workload import TraceSpec
+from repro.perfmodel.hardware import (CacheTierSpec, ClusterSpec, H100,
+                                      TIER_HOST_DRAM)
+
+MODEL = get_config("llama3_70b")
+CLUSTER = ClusterSpec(H100, n_chips=2, tp=2)
+
+TIGHT = dict(max_batch=8, kv_capacity_frac=0.0125)   # ~28 blocks of 32 tokens
+PRESSURE_REQS = dict(in_tok=400, out_tok=120, n=6)
+
+SMALL_TRACE = TraceSpec("t", input_mean=400, input_std=0.3, output_mean=96,
+                        output_std=0.3, input_max=800, output_max=192)
+
+
+def _mk_requests(n, in_tok, out_tok, stage=LLM):
+    return [Request(arrival=0.0, input_tokens=in_tok, output_tokens=out_tok,
+                    stages=[Stage(stage)]) for _ in range(n)]
+
+
+def _drive(sched, reqs, guard=50_000):
+    for r in reqs:
+        sched.add(r)
+    now, finished, steps = 0.0, [], 0
+    while sched.has_work() and steps < guard:
+        step = sched.plan_step()
+        assert step is not None, "work pending but no step planned"
+        now += step.duration
+        finished += sched.finish_step(step, now)
+        steps += 1
+    return finished
+
+
+# ---------------------------------------------------------------------------
+# allocator properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 9),
+                              st.integers(1, 120)),
+                    min_size=1, max_size=120),
+       block_tokens=st.sampled_from([1, 4, 16, 64]))
+@settings(max_examples=40, deadline=None)
+def test_allocator_random_ops_never_leak_or_double_allocate(ops, block_tokens):
+    """Random allocate/append/free/swap sequences: blocks are never double
+    allocated, used <= capacity, and freeing everything refills the pool."""
+    kv = PagedKVAllocator(capacity_bytes=100.0 * block_tokens,
+                          bytes_per_token=1.0, block_tokens=block_tokens,
+                          swap_tiers=(TIER_HOST_DRAM,))
+    live = set()
+    swapped = set()
+    for op, rid, amount in ops:
+        if op == 0 and rid not in live:
+            if kv.allocate(rid, amount):
+                live.add(rid)
+        elif op == 1 and rid in live and rid not in swapped:
+            kv.append_tokens(rid, amount)
+        elif op == 2 and rid in live:
+            kv.free(rid)
+            live.discard(rid)
+            swapped.discard(rid)
+        elif op == 3 and rid in live:
+            if rid in swapped:
+                if kv.swap_in(rid) is not None:
+                    swapped.discard(rid)
+            elif kv.swap_out(rid) is not None:
+                swapped.add(rid)
+        assert kv.used_blocks <= kv.num_blocks
+        kv.check_invariants()           # free list + tables partition pool
+    for rid in list(live):
+        kv.free(rid)
+    assert kv.used == 0.0
+    assert kv.free_blocks == kv.num_blocks
+    assert all(t.used == 0.0 for t in kv.tiers)
+    kv.check_invariants()
+
+
+def test_allocator_rejects_double_allocation():
+    kv = PagedKVAllocator(100.0, 1.0, block_tokens=4)
+    assert kv.allocate(1, 10)
+    with pytest.raises(AssertionError):
+        kv.allocate(1, 10)
+
+
+def test_allocator_swap_roundtrip_prices_tier_bandwidth():
+    tier = CacheTierSpec("t", 1e9, 1e-3, 1e6, 1.0)
+    kv = PagedKVAllocator(1000.0, 1.0, block_tokens=10, swap_tiers=(tier,))
+    assert kv.allocate(7, 100)
+    nbytes, t = kv.swap_out(7)
+    assert nbytes == 100.0 and math.isclose(t, 1e-3 + 100.0 / 1e6)
+    assert kv.used == 0.0 and kv.tiers[0].used == 100.0
+    nbytes2, t2 = kv.swap_in(7)
+    assert nbytes2 == 100.0 and kv.tiers[0].used == 0.0
+    assert kv.used == 100.0
+    # allocator-side pricing must agree with the analytical model's Eq. 1 term
+    from repro.perfmodel import analytical as ana
+    cost = ana.kv_swap_cost(nbytes, tier, CLUSTER)
+    assert math.isclose(cost.time, t)
+    assert cost.energy > 0 and cost.bound == "network"
+
+
+# ---------------------------------------------------------------------------
+# scheduler drain/failure returns every page
+# ---------------------------------------------------------------------------
+
+@given(strategy=st.sampled_from(["continuous", "chunked", "static", "mixed"]),
+       policy=st.sampled_from(["swap", "recompute"]),
+       n_steps=st.integers(0, 40))
+@settings(max_examples=20, deadline=None)
+def test_drain_returns_every_page(strategy, policy, n_steps):
+    sched = LLMScheduler(strategy, MODEL, CLUSTER,
+                         limits=SchedulerLimits(preemption=policy, **TIGHT))
+    for r in _mk_requests(6, 400, 60):
+        sched.add(r)
+    now = 0.0
+    for _ in range(n_steps):
+        if not sched.has_work():
+            break
+        step = sched.plan_step()
+        if step is None:
+            break
+        now += step.duration
+        sched.finish_step(step, now)
+    sched.drain()                       # asserts check_invariants internally
+    assert sched.kv.used == 0.0
+    assert sched.kv.free_blocks == sched.kv.num_blocks
+    assert all(t.used == 0.0 for t in sched.kv.tiers)
+
+
+# ---------------------------------------------------------------------------
+# regression: paging is behavior-neutral when capacity never binds
+# ---------------------------------------------------------------------------
+
+def _timeline(strategy, stage, **limit_kw):
+    sched = LLMScheduler(strategy, MODEL, CLUSTER,
+                         limits=SchedulerLimits(max_batch=4, chunk_size=256,
+                                                **limit_kw))
+    reqs = _mk_requests(9, 512, 8, stage=stage)
+    finished = _drive(sched, reqs)
+    assert len(finished) == 9
+    assert sched.kv.used == 0.0
+    # key by creation order (rids ascend as requests are constructed)
+    return {i: list(r.token_times)
+            for i, r in enumerate(sorted(finished, key=lambda r: r.rid))}
+
+
+@pytest.mark.parametrize("strategy,stage", [("chunked", LLM),
+                                            ("decode_only", DECODE)])
+def test_unconstrained_timelines_invariant_to_paging_knobs(strategy, stage):
+    """With capacity unconstrained, block size and preemption policy must not
+    change a single token timestamp (pure-refactor regression vs the old
+    byte-counter scheduler)."""
+    base = _timeline(strategy, stage, kv_block_tokens=32, preemption="swap")
+    for knobs in (dict(kv_block_tokens=1, preemption="swap"),
+                  dict(kv_block_tokens=4096, preemption="swap"),
+                  dict(kv_block_tokens=32, preemption="recompute")):
+        got = _timeline(strategy, stage, **knobs)
+        for k in base:
+            assert got[k] == pytest.approx(base[k]), (knobs, k)
+
+
+# ---------------------------------------------------------------------------
+# preemption policies actually fire and conserve requests
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["swap", "recompute"])
+@pytest.mark.parametrize("strategy", ["continuous", "chunked", "static",
+                                      "mixed", "decode_only"])
+def test_preemption_under_pressure_completes_all(strategy, policy):
+    sched = LLMScheduler(strategy, MODEL, CLUSTER,
+                         limits=SchedulerLimits(preemption=policy, **TIGHT))
+    stage = DECODE if strategy == "decode_only" else LLM
+    reqs = _mk_requests(PRESSURE_REQS["n"], PRESSURE_REQS["in_tok"],
+                        PRESSURE_REQS["out_tok"], stage=stage)
+    finished = _drive(sched, reqs)
+    assert len(finished) == PRESSURE_REQS["n"]
+    s = sched.kv.stats()
+    for r in finished:
+        assert r.decoded_tokens == r.output_tokens
+        assert r.token_times == sorted(r.token_times)
+    sched.kv.check_invariants()
+    assert sched.kv.used == 0.0
+    if strategy == "continuous":   # the canonical pressure case must fault
+        assert s["page_faults"] > 0, "capacity never bound: test is vacuous"
+        if policy == "swap":
+            assert s["evictions"] > 0 and s["swap_ins"] > 0
+            assert s["swap_bytes_out"] > 0
+        else:
+            assert s["recompute_drops"] > 0
+
+
+def test_decode_only_recompute_charges_kv_refetch():
+    """A decode replica cannot re-run prefill: recompute-preempted KV must
+    be re-fetched, showing up as swap traffic on re-admission."""
+    sched = LLMScheduler("decode_only", MODEL, CLUSTER,
+                         limits=SchedulerLimits(preemption="recompute",
+                                                **TIGHT))
+    for r in _mk_requests(PRESSURE_REQS["n"], PRESSURE_REQS["in_tok"],
+                          PRESSURE_REQS["out_tok"], stage=DECODE):
+        sched.add(r)
+    now, refetch_bytes, finished = 0.0, 0.0, []
+    while sched.has_work():
+        step = sched.plan_step()
+        assert step is not None
+        now += step.duration
+        refetch_bytes += step.swap_bytes
+        finished += sched.finish_step(step, now)
+    assert len(finished) == PRESSURE_REQS["n"]
+    assert sched.kv.stats()["recompute_drops"] > 0
+    assert refetch_bytes > 0, "dropped decode KV was regenerated for free"
+
+
+def test_swap_time_charged_to_steps():
+    sched = LLMScheduler("continuous", MODEL, CLUSTER,
+                         limits=SchedulerLimits(preemption="swap", **TIGHT))
+    for r in _mk_requests(PRESSURE_REQS["n"], PRESSURE_REQS["in_tok"],
+                          PRESSURE_REQS["out_tok"]):
+        sched.add(r)
+    now, swap_time, swap_bytes = 0.0, 0.0, 0.0
+    while sched.has_work():
+        step = sched.plan_step()
+        now += step.duration
+        swap_time += step.swap_time
+        swap_bytes += step.swap_bytes
+        sched.finish_step(step, now)
+    assert swap_bytes > 0 and swap_time > 0
+    # the analytical stall must match the Eq. 1 tier term for the traffic
+    assert swap_time >= swap_bytes / sched.kv.tiers[0].spec.bandwidth
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: coordinator counters + routing on kv pressure
+# ---------------------------------------------------------------------------
+
+def test_end_to_end_summary_exposes_paging_counters():
+    limits = SchedulerLimits(max_batch=16, kv_capacity_frac=0.02,
+                             preemption="swap")
+    spec = SystemSpec(n_llm_clients=2, limits=limits, with_pre_post=False,
+                      router_policy="load_based", router_metric="kv_pressure")
+    coord = build_system(spec)
+    reqs = generate(WorkloadConfig(trace=SMALL_TRACE, n_requests=25, rate=4.0,
+                                   seed=3, postprocess=False))
+    coord.submit(reqs)
+    m = coord.run()
+    assert len(m.serviced) == 25          # preemption loses no requests
+    s = m.summary()
+    assert s["kv_page_faults"] > 0
+    assert s["kv_evictions"] > 0
+    assert s["swap_bytes"] > 0            # coordinator-observed wire traffic
+    for c in coord.clients.values():
+        st_ = c.kv_stats()
+        if st_:
+            assert st_["used_blocks"] == 0
+
+
+def test_remove_waiting_resets_partial_prefill_progress():
+    """Straggler rescue of a half-prefilled chunked request must reset its
+    progress: its KV dies at the old client, so the new client re-prefills
+    from scratch (otherwise it ends up in waiting AND running at once)."""
+    sched = LLMScheduler("chunked", MODEL, CLUSTER,
+                         limits=SchedulerLimits(max_batch=4, chunk_size=256))
+    (r,) = _mk_requests(1, 512, 8)
+    sched.add(r)
+    step = sched.plan_step()
+    sched.finish_step(step, 0.1)          # one 256-token chunk done
+    assert r.prefilled_tokens == 256 and r in sched.waiting
+    assert sched.remove_waiting(r)
+    assert r.prefilled_tokens == 0
+    assert sched.kv.used == 0.0
+    # fresh scheduler (the rescue destination) completes it normally
+    sched2 = LLMScheduler("chunked", MODEL, CLUSTER,
+                          limits=SchedulerLimits(max_batch=4, chunk_size=256))
+    finished = _drive(sched2, [r])
+    assert len(finished) == 1 and r.decoded_tokens == r.output_tokens
+    assert r not in sched2.waiting and r not in sched2.running
+
+
+def test_removed_client_kv_counters_survive_in_summary():
+    limits = SchedulerLimits(max_batch=16, kv_capacity_frac=0.02,
+                             preemption="swap")
+    spec = SystemSpec(n_llm_clients=2, limits=limits, with_pre_post=False)
+    coord = build_system(spec)
+    reqs = generate(WorkloadConfig(trace=SMALL_TRACE, n_requests=25, rate=6.0,
+                                   seed=3, postprocess=False))
+    coord.submit(reqs)
+    coord.schedule_remove_client("llm1", at=2.0)   # mid-run scale-down
+    m = coord.run()
+    assert len(m.serviced) == 25
+    total_faults = m.kv["page_faults"]
+    assert total_faults > 0
+    # idempotent: a second collect over the survivors must not change totals
+    m.collect_kv([c for c in coord.clients.values()])
+    assert m.kv["page_faults"] == total_faults
+
+
+def test_client_kv_pressure_metric_counts_queue_demand():
+    limits = SchedulerLimits(kv_capacity_frac=0.02)
+    spec = SystemSpec(n_llm_clients=1, limits=limits, with_pre_post=False)
+    coord = build_system(spec)
+    (client,) = [c for c in coord.clients.values()]
+    assert client.load("kv_pressure") == 0.0
+    for r in _mk_requests(4, 600, 8):
+        client.scheduler.waiting.append(r)
+    assert client.load("kv_pressure") > 0.0

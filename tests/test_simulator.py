@@ -11,7 +11,7 @@ from repro.core import (SLO, SystemSpec, WorkloadConfig, build_system,
 from repro.core.comm import Network
 from repro.core.events import EventQueue
 from repro.core.llm_scheduler import ClientPerf, LLMScheduler, SchedulerLimits
-from repro.core.memory import (MemoryManager, expected_retrieval_latency,
+from repro.core.memory import (PagedKVAllocator, expected_retrieval_latency,
                                sample_retrieval_latency)
 from repro.core.request import Request, Stage, LLM, regular_pipeline
 from repro.core.workload import AZURE_CONV, arrival_times
@@ -82,18 +82,24 @@ def test_eq1_sample_mean_converges(size):
 
 
 # ---------------------------------------------------------------------------
-# memory manager
+# paged KV allocator
 # ---------------------------------------------------------------------------
 
-@given(st.lists(st.floats(1.0, 100.0), min_size=1, max_size=40))
-def test_memory_never_exceeds_capacity_on_admit(sizes):
-    mm = MemoryManager(capacity=500.0)
+@given(st.lists(st.integers(1, 100), min_size=1, max_size=40))
+def test_allocator_never_exceeds_capacity_on_admit(sizes):
+    kv = PagedKVAllocator(capacity_bytes=500.0, bytes_per_token=1.0,
+                          block_tokens=4)
     admitted = []
-    for s in sizes:
-        if mm.admit(s):
-            admitted.append(s)
-    assert mm.used <= mm.capacity + 1e-9
-    assert math.isclose(mm.used, sum(admitted), rel_tol=1e-9)
+    for rid, s in enumerate(sizes):
+        if kv.allocate(rid, s):
+            admitted.append((rid, s))
+    assert kv.used_blocks <= kv.num_blocks
+    assert kv.used_blocks == sum(kv.blocks_for_tokens(s) for _, s in admitted)
+    kv.check_invariants()
+    for rid, _ in admitted:
+        kv.free(rid)
+    assert kv.used == 0.0
+    kv.check_invariants()
 
 
 # ---------------------------------------------------------------------------
@@ -192,9 +198,13 @@ def test_scheduler_memory_conservation():
         step = sched.plan_step()
         now += step.duration
         sched.finish_step(step, now)
-        live = sum(sched.admitted_bytes.values())
-        assert math.isclose(sched.memory.used, live, rel_tol=1e-9)
-    assert sched.memory.used == 0.0
+        # free list + live block tables always partition the pool, and
+        # every allocated block is attributable to a live request
+        sched.kv.check_invariants()
+        live = sum(len(t.blocks) for t in sched.kv.tables.values()
+                   if t.on_device)
+        assert sched.kv.used_blocks == live
+    assert sched.kv.used == 0.0
 
 
 def test_chunked_interleaves_prefill_and_decode():
