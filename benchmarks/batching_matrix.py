@@ -1,6 +1,8 @@
 """Batching-strategy study (paper Figs. 10-12, Table III): strategies x
 traces x pipelines x injection rates -> throughput, throughput/energy, TTFT;
-emits a Table-III-style recommendation per cell.
+emits a Table-III-style recommendation per cell. A ``kv_capacity_frac`` axis
+probes whether the recommendation survives HBM consolidation (shrunken KV
+pools -> paging pressure).
 """
 from __future__ import annotations
 
@@ -9,13 +11,17 @@ from typing import Dict, List
 from benchmarks.common import row, timeit
 from repro.core import (SLO, SystemSpec, WorkloadConfig, build_system,
                         generate)
+from repro.core.llm_scheduler import SchedulerLimits
 from repro.core.workload import AZURE_CODE, AZURE_CONV
 
 STRATEGIES = ("continuous", "chunked", "disaggregated")
+CAPACITY_FRACS = (1.0, 0.05)
 
 
-def _spec(strategy: str, pipeline: str, n_clients: int = 4) -> SystemSpec:
-    kw: Dict = dict(with_pre_post=False)
+def _spec(strategy: str, pipeline: str, n_clients: int = 4,
+          frac: float = 1.0) -> SystemSpec:
+    kw: Dict = dict(with_pre_post=False,
+                    limits=SchedulerLimits(kv_capacity_frac=frac))
     if pipeline == "rag":
         kw.update(with_rag=True, rag_embed_on_npu=True)
     if pipeline == "kv":
@@ -29,8 +35,8 @@ def _spec(strategy: str, pipeline: str, n_clients: int = 4) -> SystemSpec:
 
 
 def _run_cell(strategy: str, trace, pipeline: str, rate: float,
-              n_requests: int = 80) -> Dict:
-    coord = build_system(_spec(strategy, pipeline))
+              n_requests: int = 80, frac: float = 1.0) -> Dict:
+    coord = build_system(_spec(strategy, pipeline, frac=frac))
     wl = WorkloadConfig(trace=trace, rate=rate, n_requests=n_requests,
                         pipeline={"kv": "kv", "rag": "rag"}.get(pipeline,
                                                                 "regular"),
@@ -49,28 +55,32 @@ def run() -> List[str]:
     best: Dict[str, Dict[str, str]] = {}
     for trace, tname in ((AZURE_CONV, "conv"), (AZURE_CODE, "code")):
         for pipeline in ("regular", "rag", "kv"):
-            scores = {}
-            for strat in STRATEGIES:
-                import time
-                t0 = time.perf_counter()
-                s = _run_cell(strat, trace, pipeline, rate=3.0)
-                us = (time.perf_counter() - t0) * 1e6
-                scores[strat] = s
-                out.append(row(
-                    f"batching_{tname}_{pipeline}_{strat}", us,
-                    f"thpt={s['throughput_tok_s']:.0f} "
-                    f"ttft_p50={s['ttft_p50']*1e3:.0f}ms "
-                    f"tpot_p50={s['tpot_p50']*1e3:.1f}ms "
-                    f"tok/J={s.get('tok_per_joule', 0):.4f} "
-                    f"slo_ok={s.get('slo_ok')}"))
-            cell = f"{tname}/{pipeline}"
-            best[cell] = {
-                "TTFT": min(scores, key=lambda k: scores[k]["ttft_p50"]),
-                "Throughput": max(scores,
-                                  key=lambda k: scores[k]["throughput_tok_s"]),
-                "Throughput/Energy": max(
-                    scores, key=lambda k: scores[k].get("tok_per_joule", 0)),
-            }
+            for frac in CAPACITY_FRACS:
+                scores = {}
+                for strat in STRATEGIES:
+                    import time
+                    t0 = time.perf_counter()
+                    s = _run_cell(strat, trace, pipeline, rate=3.0, frac=frac)
+                    us = (time.perf_counter() - t0) * 1e6
+                    scores[strat] = s
+                    suffix = "" if frac == 1.0 else f"_f{frac}"
+                    out.append(row(
+                        f"batching_{tname}_{pipeline}_{strat}{suffix}", us,
+                        f"thpt={s['throughput_tok_s']:.0f} "
+                        f"ttft_p50={s['ttft_p50']*1e3:.0f}ms "
+                        f"tpot_p50={s['tpot_p50']*1e3:.1f}ms "
+                        f"tok/J={s.get('tok_per_joule', 0):.4f} "
+                        f"slo_ok={s.get('slo_ok')}"))
+                cell = f"{tname}/{pipeline}" + (
+                    "" if frac == 1.0 else f"/f{frac}")
+                best[cell] = {
+                    "TTFT": min(scores, key=lambda k: scores[k]["ttft_p50"]),
+                    "Throughput": max(
+                        scores, key=lambda k: scores[k]["throughput_tok_s"]),
+                    "Throughput/Energy": max(
+                        scores,
+                        key=lambda k: scores[k].get("tok_per_joule", 0)),
+                }
     for cell, rec in best.items():
         out.append(row(f"tableIII_{cell.replace('/', '_')}", 0.0,
                        f"ttft_best={rec['TTFT']} thpt_best={rec['Throughput']} "

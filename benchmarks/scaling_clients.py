@@ -1,5 +1,7 @@
 """Client scaling (paper Fig. 13): highest per-client rate meeting the SLO as
-the client count grows, per strategy."""
+the client count grows, per strategy — swept over ``kv_capacity_frac`` to
+find SLO-preserving consolidation points (how much HBM can be taken away, or
+how many requests packed per client, before the SLO breaks)."""
 from __future__ import annotations
 
 import time
@@ -7,24 +9,31 @@ from typing import List
 
 from benchmarks.common import row
 from repro.core import SLO, SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.llm_scheduler import SchedulerLimits
 
 
 # TPOT baseline calibrated to our analytical 2xH100 TP2 model (~32ms/step at
 # full batch); the paper's relative strategy ordering is the deliverable.
 _SLO = SLO(ttft_base=0.4, tpot_base=0.040)
 
+# 1.0 = full HBM; the small fractions probe the consolidation frontier where
+# paging/preemption starts to eat the SLO headroom
+CAPACITY_FRACS = (1.0, 0.05)
 
-def _max_rate(strategy: str, n_clients: int, rates=(0.5, 1.0, 2.0, 4.0)) -> float:
+
+def _max_rate(strategy: str, n_clients: int, frac: float = 1.0,
+              rates=(0.5, 1.0, 2.0, 4.0)) -> float:
     best = 0.0
+    limits = SchedulerLimits(kv_capacity_frac=frac)
     for rate in rates:
         if strategy == "disaggregated":
             n_p = max(1, int(n_clients * 0.6))
             spec = SystemSpec(strategy="disaggregated", n_prefill=n_p,
                               n_decode=max(1, n_clients - n_p),
-                              with_pre_post=False)
+                              limits=limits, with_pre_post=False)
         else:
             spec = SystemSpec(n_llm_clients=n_clients, strategy=strategy,
-                              with_pre_post=False)
+                              limits=limits, with_pre_post=False)
         coord = build_system(spec)
         wl = WorkloadConfig(rate=rate * n_clients, n_requests=60,
                             disaggregated=(strategy == "disaggregated"),
@@ -40,9 +49,13 @@ def run() -> List[str]:
     out = []
     for strategy in ("continuous", "chunked", "disaggregated"):
         for n in (2, 4, 8):
-            t0 = time.perf_counter()
-            r = _max_rate(strategy, n)
-            us = (time.perf_counter() - t0) * 1e6
-            out.append(row(f"scaling_{strategy}_c{n}", us,
-                           f"max_rate_per_client={r}req/s"))
+            for frac in CAPACITY_FRACS:
+                t0 = time.perf_counter()
+                r = _max_rate(strategy, n, frac)
+                us = (time.perf_counter() - t0) * 1e6
+                # full-HBM rows keep their historical names; only the
+                # consolidation points carry the frac suffix
+                suffix = "" if frac == 1.0 else f"_f{frac}"
+                out.append(row(f"scaling_{strategy}_c{n}{suffix}", us,
+                               f"max_rate_per_client={r}req/s"))
     return out

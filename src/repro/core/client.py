@@ -70,7 +70,10 @@ class Client:
         if metric == "queue":
             return len(waiting) + len(running)
         if metric == "input_len":
-            return sum(r.input_tokens for r in waiting + running)
+            # effective prefill work, not raw prompt length: KV-retrieval /
+            # RAG / prefix-cached requests only cost their uncached tokens,
+            # so they must not repel the router from the right client
+            return sum(r.effective_prefill_tokens for r in waiting + running)
         if metric == "output_len":
             return sum(r.output_tokens for r in waiting + running)
         if metric == "kv_size":
@@ -95,6 +98,17 @@ class Client:
         """Paged-allocator counters (empty for non-LLM clients)."""
         kv = getattr(self.scheduler, "kv", None)
         return kv.stats() if kv is not None else {}
+
+    def prefix_hit_tokens(self, req: rq.Request) -> int:
+        """Prompt tokens of ``req`` whose KV pages this client's radix cache
+        already holds (0 for non-LLM clients or identity-less requests).
+        Routers use this for prefix-affinity placement."""
+        kv = getattr(self.scheduler, "kv", None)
+        if kv is None or not req.prefix_segments:
+            return 0
+        if not getattr(self.scheduler.limits, "prefix_caching", False):
+            return 0
+        return kv.peek_prefix_tokens(req.prefix_block_hashes(kv.block_tokens))
 
 
 class PreprocessClient(Client):
@@ -187,7 +201,12 @@ class KVRetrievalClient(Client):
         def latency(batch: List[rq.Request]) -> float:
             t = 0.0
             for r in batch:
-                size = r.cached_tokens * self.kv_bytes_per_token
+                # fiat mode prices the granted cached_tokens; radix real-
+                # lookup mode grants 0 up front, so the stage prices the
+                # candidate context it probes the tier chain for
+                cand = max(r.cached_tokens,
+                           r.current_stage.params.get("candidate_tokens", 0))
+                size = cand * self.kv_bytes_per_token
                 miss = self.recompute_fn(size)
                 if self.sample:
                     lt = sample_retrieval_latency(size, self.tiers, miss, self.rng)

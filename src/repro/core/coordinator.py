@@ -142,6 +142,19 @@ class Coordinator:
                 src_c = self.clients.get(src)
                 if isinstance(src_c, LLMClient):
                     nbytes = src_c.kv_transfer_bytes_fn(req)
+                    # wire-side prefix dedup: pages the destination's radix
+                    # cache already holds need not ship (the decode client
+                    # maps them at admission instead). Priced at transfer-
+                    # schedule time; a page evicted before the request is
+                    # admitted still rides for free — real systems pin
+                    # matched pages for the transfer window, which we
+                    # approximate by not re-checking at admission.
+                    hit = dst_client.prefix_hit_tokens(req)
+                    if hit > 0:
+                        saved = min(nbytes,
+                                    hit * src_c.scheduler.kv_per_token)
+                        nbytes -= saved
+                        self.metrics.kv_transfer_dedup_bytes += saved
                     n_layers = src_c.model_cfg.num_layers
                     gran = self.cfg.kv_transfer_granularity
             elif prev_stage.kind in (rq.RAG_RETRIEVE, rq.RAG_EMBED):

@@ -7,6 +7,13 @@ reserves whole-context block tables, decode growth faults in blocks one at a
 time, and exhaustion is resolved by a pluggable preemption policy —
 ``swap`` (offload the coldest request's pages to the next tier, priced with
 the Eq. 1 tier term) or ``recompute`` (drop pages, re-enqueue the prefill).
+
+Prefix sharing (``limits.prefix_caching``, on by default): requests carrying
+``prefix_segments`` admit against the allocator's radix cache — resident
+shared-prefix blocks are mapped instead of re-allocated, and the hit tokens
+discount the prefill compute (``Request.cached_tokens`` becomes a *real*
+lookup). Multi-branch reasoning requests fork their block table copy-on-write
+on the first divergent decode write, so branches share every prefill page.
 """
 from __future__ import annotations
 
@@ -35,6 +42,10 @@ class SchedulerLimits:
     preemption: str = "swap"           # swap | recompute
     kv_capacity_frac: float = 1.0      # scale usable HBM (capacity studies)
     swap_tiers: Tuple[CacheTierSpec, ...] = DEFAULT_SWAP_TIERS
+    # shared-prefix radix cache + copy-on-write branch forking. Neutral for
+    # workloads without prefix_segments / branches; set False to reproduce
+    # the pre-radix (PR 1) allocator behavior exactly.
+    prefix_caching: bool = True
 
 
 @dataclass
@@ -150,9 +161,52 @@ class LLMScheduler:
             self.waiting.sort(key=lambda r: r.effective_prefill_tokens
                               + r.remaining_tokens)
 
+    # --- prefix sharing -------------------------------------------------
+    def _prefix_hashes(self, r: Request) -> List[int]:
+        if not self.limits.prefix_caching or not r.prefix_segments:
+            return []
+        return r.prefix_block_hashes(self.kv.block_tokens)
+
+    def _apply_prefix_discount(self, r: Request) -> List[int]:
+        """Turn ``cached_tokens`` into a real radix-cache lookup: the tokens
+        whose blocks are already resident need no prefill compute. At least
+        one token is always computed (the sampling position). Requests
+        without a shared-prefix identity keep their fiat value."""
+        hashes = self._prefix_hashes(r)
+        if hashes:
+            hit = self.kv.peek_prefix_tokens(hashes)
+            r.cached_tokens = min(hit, r.input_tokens + r.rag_tokens - 1)
+        return hashes
+
+    def _branch_rids(self, r: Request) -> List:
+        """Allocator keys for the copy-on-write branch tables of a
+        multi-branch reasoning request (the parent keeps ``r.rid``)."""
+        if r.branches <= 1 or not self.limits.prefix_caching:
+            return []
+        return [("br", r.rid, b) for b in range(1, r.branches)]
+
+    def _release_kv(self, r: Request):
+        """Free the request's main table plus any forked branch tables."""
+        for br in self._branch_rids(r):
+            if self.kv.holds(br):
+                self.kv.free(br)
+        self.kv.free(r.rid)
+
+    def _drop_kv(self, r: Request):
+        """Recompute-preemption drop, branch tables included."""
+        for br in self._branch_rids(r):
+            if self.kv.holds(br):
+                self.kv.free(br)
+        self.kv.drop(r.rid)
+
     def _admit_decode(self, req: Request) -> bool:
+        # prefix hashes dedup handed-off pages against this client's radix
+        # cache, but the hit tokens were already counted at the prefill
+        # client — count_hits=False keeps the global counters single-counted
         if not self.kv.allocate(req.rid, req.total_context,
-                                force=self._oversized(req.total_context)):
+                                prefix_hashes=self._prefix_hashes(req),
+                                force=self._oversized(req.total_context),
+                                count_hits=False):
             return False
         if req.rid in self._needs_refetch:
             self._needs_refetch.discard(req.rid)
@@ -183,13 +237,15 @@ class LLMScheduler:
         used = 0
         while self.waiting and len(out) < batch_budget:
             r = self.waiting[0]
+            hashes = self._apply_prefix_discount(r)
             toks = r.effective_prefill_tokens
             if out and used + toks > token_budget:
                 break
             # decoded_tokens > 0 happens on re-admission after a recompute
             # preemption: the regenerated KV occupies slots again
             ctx = r.input_tokens + r.rag_tokens + r.decoded_tokens
-            if not self.kv.allocate(r.rid, ctx, force=self._oversized(ctx)):
+            if not self.kv.allocate(r.rid, ctx, prefix_hashes=hashes,
+                                    force=self._oversized(ctx)):
                 break
             self.waiting.pop(0)
             out.append((r, toks))
@@ -237,7 +293,7 @@ class LLMScheduler:
             r = self.swapped[0]
             need = len(self.kv.tables[r.rid].blocks)
             headroom = len(self.running) if (self.running or self.waiting) else 0
-            if need + headroom > self.kv.free_blocks:
+            if need + headroom > self.kv.available_blocks:
                 break
             res = self.kv.swap_in(r.rid)
             if res is None:
@@ -273,14 +329,14 @@ class LLMScheduler:
         for r in self.static_batch:
             if r is not grower and r.remaining_tokens <= 0 \
                     and self.kv.holds(r.rid):
-                self.kv.free(r.rid)
+                self._release_kv(r)
                 return True
         victim = self._preemptable(exclude=grower)
         if victim is None:
             # last resort: a queued chunked request holding partial pages
             for r in reversed(self.waiting):
                 if r is not grower and self.kv.holds(r.rid):
-                    self.kv.drop(r.rid)
+                    self._drop_kv(r)
                     r.prefilled_tokens = 0
                     self.chunk_progress.pop(r.rid, None)
                     r.preemptions += 1
@@ -290,6 +346,9 @@ class LLMScheduler:
         victim.preemptions += 1
         self._pending_preemptions += 1
         if self.limits.preemption == "swap":
+            # swap moves physical pages, so it applies only to refcount-1
+            # tables; shared-prefix / forked victims return None and degrade
+            # to recompute (which merely drops references)
             res = self.kv.swap_out(victim.rid)
             if res is not None:
                 nbytes, t = res
@@ -298,8 +357,8 @@ class LLMScheduler:
                 self._remove_from_pools(victim)
                 self.swapped.append(victim)
                 return True
-            # spill tiers full: degrade to recompute
-        self.kv.drop(victim.rid)
+            # spill tiers full or pages shared: degrade to recompute
+        self._drop_kv(victim)
         victim.prefilled_tokens = 0
         self.chunk_progress.pop(victim.rid, None)
         if self.strategy == "decode_only":
@@ -315,11 +374,27 @@ class LLMScheduler:
 
     def _grow(self, r: Request) -> bool:
         """Decode growth with preemption: returns False only when ``r`` was
-        itself preempted (recompute) and must not emit a token this step."""
-        while not self.kv.append_tokens(r.rid, r.branches):
+        itself preempted (recompute) and must not emit a token this step.
+
+        Multi-branch requests (prefix sharing on) grow one token per branch
+        across copy-on-write tables forked from the prefill table on the
+        first divergent write — branches share every prefill page and own
+        only their divergent decode pages. With sharing off, the pre-radix
+        behavior (one table growing ``branches`` slots per step) is kept."""
+        brs = self._branch_rids(r)
+        if brs:
+            if not self.kv.holds(brs[0]):     # first divergent decode write
+                for br in brs:
+                    self.kv.fork(r.rid, br)
+            grow = lambda force=False: self.kv.grow_request(
+                [r.rid] + brs, 1, force=force)
+        else:
+            grow = lambda force=False: self.kv.append_tokens(
+                r.rid, r.branches, force=force)
+        while not grow():
             if not self._preempt_one(r):
                 # r alone holds the pool (oversized request): overcommit
-                self.kv.append_tokens(r.rid, r.branches, force=True)
+                grow(force=True)
                 return True
             if not self.kv.holds(r.rid) or not self.kv.tables[r.rid].on_device:
                 return False   # r lost its own pages to the policy
@@ -376,8 +451,9 @@ class LLMScheduler:
             r = self.waiting[0]
             done = self.chunk_progress.get(r.rid, 0)
             if done == 0 and not self.kv.holds(r.rid):
+                hashes = self._apply_prefix_discount(r)
                 ctx = r.input_tokens + r.rag_tokens + r.decoded_tokens
-                if not self.kv.allocate(r.rid, ctx,
+                if not self.kv.allocate(r.rid, ctx, prefix_hashes=hashes,
                                         force=self._oversized(ctx)):
                     break
             remaining = r.effective_prefill_tokens - done
@@ -439,10 +515,12 @@ class LLMScheduler:
                     self.total_tokens += 1
                 if self.strategy == "prefill_only":
                     finished.append(r)  # hand off to the decode client
-                    self.kv.free(r.rid)  # KV ships to the decode client
+                    # KV ships to the decode client; radix-registered prefix
+                    # blocks stay cached for the next same-prefix prefill
+                    self._release_kv(r)
                 elif r.remaining_tokens <= 0:
                     finished.append(r)
-                    self.kv.free(r.rid)
+                    self._release_kv(r)
                 elif self.strategy != "static":
                     self.running.append(r)
         for r in step.decode:
@@ -460,14 +538,14 @@ class LLMScheduler:
             self.total_tokens += r.branches
             if r.remaining_tokens <= 0 and self.strategy != "static":
                 finished.append(r)
-                self.kv.free(r.rid)
+                self._release_kv(r)
                 if r in self.running:
                     self.running.remove(r)
         if self.strategy == "static" and self.static_batch and \
                 all(r.remaining_tokens <= 0 for r in self.static_batch):
             for r in self.static_batch:
                 finished.append(r)
-                self.kv.free(r.rid)
+                self._release_kv(r)
             self.static_batch = []
         self.history.append({
             "time": now, "queue": len(self.waiting), "running": len(self.running),
@@ -484,7 +562,7 @@ class LLMScheduler:
         out = (list(self.waiting) + list(self.running)
                + list(self.static_batch) + list(self.swapped))
         for r in out:
-            self.kv.free(r.rid)
+            self._release_kv(r)
             r.prefilled_tokens = 0
             if r.decoded_tokens > 1:
                 r.decoded_tokens = max(1, r.decoded_tokens)  # keep emitted tokens
@@ -493,6 +571,7 @@ class LLMScheduler:
         self.swapped = []
         self.chunk_progress.clear()
         self._needs_refetch.clear()
+        self.kv.clear_cache()          # a failed client's radix cache is gone
         self.kv.check_invariants()
         return out
 
@@ -503,7 +582,7 @@ class LLMScheduler:
         if r not in self.waiting:
             return False
         self.waiting.remove(r)
-        self.kv.free(r.rid)
+        self._release_kv(r)
         self.chunk_progress.pop(r.rid, None)
         self._needs_refetch.discard(r.rid)
         r.prefilled_tokens = 0

@@ -1,7 +1,7 @@
 """Paged, tiered KV-cache subsystem (paper §III-D admission control +
-§III-E3 multi-level retrieval, Eq. 1).
+§III-E3 multi-level retrieval, Eq. 1) with shared-prefix radix caching.
 
-Two layers live here:
+Three layers live here:
 
 1. **Retrieval pricing (Eq. 1).** ``expected_retrieval_latency`` /
    ``sample_retrieval_latency`` evaluate the paper's recursive cache-lookup
@@ -33,9 +33,27 @@ Two layers live here:
    * Internal fragmentation (allocated-but-unfilled token slots in each
      request's last block) is tracked and exported through ``stats()`` so
      routers can balance on real, fragmentation-aware KV pressure.
+
+3. **Shared-prefix radix cache (``RadixBlockIndex``).** Physical blocks are
+   *refcounted*; a hash chain over block-aligned prompt content maps prefixes
+   to resident physical blocks, so
+
+   * requests whose prompts share a block-aligned prefix map the *same*
+     physical pages (paper §IV-A reasoning, RAG system-prompt/chunk reuse);
+   * a multi-branch reasoning request ``fork``s its block table copy-on-write:
+     branches share every prefill page and copy only the partial tail block
+     on the first divergent decode write;
+   * blocks whose refcount drops to zero stay resident as *cached* and are
+     reclaimed leaf-first in LRU order only when the free list runs dry.
+
+   The radix cache composes with the preemption policies above: ``swap_out``
+   may only victimize tables whose pages all have refcount 1 (a shared page
+   cannot move without stranding its other owners); shared victims degrade to
+   ``recompute``, which merely drops references.
 """
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -101,11 +119,14 @@ class KVTierState:
 
 @dataclass
 class BlockTable:
-    """Per-request page map: which physical blocks hold this request's KV."""
-    rid: int
+    """Per-request page map: which physical blocks hold this request's KV.
+    ``hashes[i]`` (when present) is the radix-registered content hash of
+    ``blocks[i]`` — only full, block-aligned prompt-prefix blocks register."""
+    rid: object
     blocks: List[int] = field(default_factory=list)
     tokens: int = 0            # KV token slots actually filled
     tier: int = DEVICE_TIER    # DEVICE_TIER, or 1-based index into spill tiers
+    hashes: List[int] = field(default_factory=list)
 
     @property
     def on_device(self) -> bool:
@@ -113,14 +134,107 @@ class BlockTable:
 
 
 # ---------------------------------------------------------------------------
+# radix prefix index
+# ---------------------------------------------------------------------------
+
+class _RadixNode:
+    __slots__ = ("hash", "block", "parent_hash", "children")
+
+    def __init__(self, h: int, block: int, parent_hash: Optional[int]):
+        self.hash = h
+        self.block = block
+        self.parent_hash = parent_hash
+        self.children = 0
+
+
+class RadixBlockIndex:
+    """Block-granular radix cache: a chain of content hashes (each chained
+    over its parent, so equal chains imply equal block-aligned prefixes) maps
+    to resident physical blocks. Blocks with refcount 0 stay resident as
+    *cached* entries and are evicted leaf-first in LRU order."""
+
+    def __init__(self):
+        self.nodes: Dict[int, _RadixNode] = {}
+        self.by_block: Dict[int, int] = {}       # block id -> hash
+        self._cached: Dict[int, None] = {}       # rc-0 resident blocks, LRU order
+
+    # -- lookup ------------------------------------------------------------
+    def match(self, chain: Sequence[int]) -> List[int]:
+        """Longest resident prefix: physical blocks for the leading hashes."""
+        out: List[int] = []
+        for h in chain:
+            node = self.nodes.get(h)
+            if node is None:
+                break
+            out.append(node.block)
+        return out
+
+    # -- registration ------------------------------------------------------
+    def insert(self, h: int, block: int, parent_hash: Optional[int]) -> bool:
+        """Register a freshly-filled block under its chain hash. A collision
+        (the hash resurfacing after a partial unregister) keeps the existing
+        entry and leaves the new block private."""
+        if h in self.nodes:
+            return False
+        self.nodes[h] = _RadixNode(h, block, parent_hash)
+        self.by_block[block] = h
+        parent = self.nodes.get(parent_hash) if parent_hash is not None else None
+        if parent is not None:
+            parent.children += 1
+        return True
+
+    def holds_block(self, block: int) -> bool:
+        return block in self.by_block
+
+    def unregister(self, block: int):
+        """Drop a block's entry (its content is leaving the device)."""
+        h = self.by_block.pop(block, None)
+        if h is None:
+            return
+        node = self.nodes.pop(h)
+        self._cached.pop(block, None)
+        parent = (self.nodes.get(node.parent_hash)
+                  if node.parent_hash is not None else None)
+        if parent is not None:
+            parent.children -= 1
+
+    # -- refcount transitions ---------------------------------------------
+    def acquire(self, block: int):
+        """Block went refcount 0 -> 1: it is live again, not evictable."""
+        self._cached.pop(block, None)
+
+    def release(self, block: int):
+        """Registered block went refcount 1 -> 0: keep resident as cached."""
+        self._cached[block] = None        # (re)append = most recently used
+
+    # -- eviction ----------------------------------------------------------
+    def cached_count(self) -> int:
+        return len(self._cached)
+
+    def evict_one(self) -> Optional[int]:
+        """Evict the LRU cached *leaf* (a node with registered children may
+        not go before them, so chains never get holes). Returns the freed
+        physical block id, or None when nothing is evictable."""
+        for block in self._cached:
+            if self.nodes[self.by_block[block]].children == 0:
+                self.unregister(block)
+                return block
+        return None
+
+
+# ---------------------------------------------------------------------------
 # paged allocator
 # ---------------------------------------------------------------------------
 
 class PagedKVAllocator:
-    """Fixed-size-block KV allocator over an HBM pool with spill tiers.
+    """Fixed-size-block KV allocator over an HBM pool with spill tiers and a
+    shared-prefix radix cache.
 
     All admission/growth/release in ``LLMScheduler`` goes through this; the
-    free list is the single source of truth for device KV occupancy.
+    free list + refcounts are the single source of truth for device KV
+    occupancy. Physical blocks are refcounted so block tables may alias:
+    prefix-sharing admissions and copy-on-write ``fork``s reference the same
+    pages instead of duplicating them.
     """
 
     def __init__(self, capacity_bytes: float, bytes_per_token: float,
@@ -133,8 +247,10 @@ class PagedKVAllocator:
         self.num_blocks = max(1, int(capacity_bytes // max(self.block_bytes, 1.0)))
         self.capacity = self.num_blocks * self.block_bytes
         self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
-        self.tables: Dict[int, BlockTable] = {}
+        self.tables: Dict[object, BlockTable] = {}
         self.tiers: List[KVTierState] = [KVTierState(s) for s in swap_tiers]
+        self.refcount: Dict[int, int] = {}
+        self.radix = RadixBlockIndex()
         # overcommit escape hatch: requests larger than the whole pool get
         # "overflow" blocks with ids >= num_blocks (counted, never recycled
         # into the free list) so the simulation stays live and the pressure
@@ -151,6 +267,16 @@ class PagedKVAllocator:
         self.swap_bytes_in = 0.0
         self.recompute_drops = 0
         self.peak_blocks = 0
+        # prefix-sharing counters
+        self.prefix_hit_tokens = 0     # prompt tokens served from the radix cache
+        self.prefix_hit_blocks = 0
+        self.cow_forks = 0             # fork() events (branch table splits)
+        self.cow_copied_blocks = 0     # partial tail blocks copied on write
+        self.radix_evictions = 0       # cached blocks reclaimed for allocation
+        self.block_refs_total = 0      # logical block references ever created
+        self.blocks_allocated_total = 0  # physical blocks ever taken
+        self._n_shared = 0             # blocks with refcount > 1, now
+        self.shared_blocks_peak = 0
 
     # -- capacity queries ---------------------------------------------------
     @property
@@ -158,8 +284,20 @@ class PagedKVAllocator:
         return len(self._free)
 
     @property
+    def cached_blocks(self) -> int:
+        """Resident refcount-0 blocks retained by the radix cache."""
+        return self.radix.cached_count()
+
+    @property
+    def available_blocks(self) -> int:
+        """Immediately allocatable: free list + evictable cached blocks."""
+        return len(self._free) + self.radix.cached_count()
+
+    @property
     def used_blocks(self) -> int:
-        return self.num_blocks - len(self._free) + self._overflow_live
+        """Blocks referenced by at least one live table (cached excluded)."""
+        return (self.num_blocks - len(self._free) - self.radix.cached_count()
+                + self._overflow_live)
 
     @property
     def used(self) -> float:
@@ -170,7 +308,7 @@ class PagedKVAllocator:
         return max(0, -(-int(tokens) // self.block_tokens))
 
     def can_allocate(self, tokens: int) -> bool:
-        return self.blocks_for_tokens(tokens) <= len(self._free)
+        return self.blocks_for_tokens(tokens) <= self.available_blocks
 
     def fragmentation_bytes(self) -> float:
         """Allocated-but-unfilled token slots across resident block tables."""
@@ -180,8 +318,50 @@ class PagedKVAllocator:
                 slack += len(t.blocks) * self.block_tokens - t.tokens
         return slack * self.bytes_per_token
 
+    # -- refcount plumbing ---------------------------------------------------
+    def _incref(self, b: int):
+        rc = self.refcount.get(b, 0) + 1
+        self.refcount[b] = rc
+        self.block_refs_total += 1
+        if rc == 1:
+            self.radix.acquire(b)          # cached -> live
+        elif rc == 2:
+            self._n_shared += 1
+            self.shared_blocks_peak = max(self.shared_blocks_peak,
+                                          self._n_shared)
+
+    def _decref(self, b: int) -> bool:
+        """Drop one reference. Returns True when the block returned to the
+        free list (registered blocks stay resident as cached instead)."""
+        rc = self.refcount[b] - 1
+        if rc > 0:
+            self.refcount[b] = rc
+            if rc == 1:
+                self._n_shared -= 1
+            return False
+        del self.refcount[b]
+        if b >= self.num_blocks:           # overflow ids retire, never recycle
+            self._overflow_live -= 1
+            return False
+        if self.radix.holds_block(b):
+            self.radix.release(b)          # live -> cached, evictable LRU
+            return False
+        self._free.append(b)
+        return True
+
     # -- allocation / growth / release --------------------------------------
+    def _reclaim(self, n: int):
+        """Evict cached radix blocks (LRU, leaf-first) until the free list
+        holds ``n`` blocks or nothing cached remains evictable."""
+        while len(self._free) < n:
+            b = self.radix.evict_one()
+            if b is None:
+                break
+            self._free.append(b)
+            self.radix_evictions += 1
+
     def _take(self, n: int, force: bool = False) -> List[int]:
+        self._reclaim(n)
         real = min(n, len(self._free))
         got = [self._free.pop() for _ in range(real)]
         if n > real:
@@ -191,121 +371,259 @@ class PagedKVAllocator:
             self._next_overflow_id += n - real
             self._overflow_live += n - real
             self.overcommitted_blocks += n - real
+        for b in got:
+            self._incref(b)
+        self.blocks_allocated_total += len(got)
         self.peak_blocks = max(self.peak_blocks, self.used_blocks)
         return got
 
-    def _give_back(self, blocks: List[int]) -> int:
-        """Return device blocks to the free list; retire overflow ids."""
-        real = [b for b in blocks if b < self.num_blocks]
-        self._free.extend(real)
-        self._overflow_live -= len(blocks) - len(real)
-        return len(real)
+    def peek_prefix_tokens(self, prefix_hashes: Sequence[int]) -> int:
+        """Tokens of the chain currently resident (read-only lookup)."""
+        if not prefix_hashes:
+            return 0
+        return len(self.radix.match(prefix_hashes)) * self.block_tokens
 
-    def allocate(self, rid: int, tokens: int, force: bool = False) -> bool:
+    def allocate(self, rid, tokens: int, prefix_hashes: Sequence[int] = (),
+                 force: bool = False, count_hits: bool = True) -> bool:
         """Whole-context admission (prefill): reserve ceil(tokens/B) blocks.
+        Blocks whose chain hash is resident in the radix cache are *shared*
+        (refcount bump, no new page); the rest come off the free list and the
+        full prompt-prefix ones register for future admissions to hit.
         ``force`` overcommits instead of failing (requests bigger than the
-        entire pool — the caller decides, normal backpressure stays intact)."""
+        entire pool — the caller decides, normal backpressure stays intact).
+        ``count_hits=False`` still dedups pages but leaves the prefix-hit
+        counters alone (disaggregated decode admission: the same tokens were
+        already counted as hits at the prefill client, and the decode-side
+        saving is reported as ``kv_transfer_dedup_bytes`` instead).
+
+        Modeling note: blocks register at admission, before the prefill that
+        fills them completes, so an immediately-following same-prefix request
+        hits in-flight KV (SGLang-style cache-aware scheduling). Real radix
+        caches that gate on computed blocks would hit one step later."""
         assert rid not in self.tables, f"double allocation for rid={rid}"
-        need = self.blocks_for_tokens(tokens)
-        if need > len(self._free) and not force:
+        need_total = self.blocks_for_tokens(tokens)
+        matched: List[int] = []
+        if prefix_hashes:
+            matched = self.radix.match(prefix_hashes)[:need_total]
+        need_new = need_total - len(matched)
+        # revive matched blocks first: cached ones leave the evictable pool,
+        # so the availability check must see the post-match state
+        for b in matched:
+            self._incref(b)
+        if need_new > self.available_blocks and not force:
+            for b in matched:
+                self._decref(b)
+            self.block_refs_total -= len(matched)   # admission never happened
             self.admission_failures += 1
             return False
-        self.tables[rid] = BlockTable(rid, self._take(need, force), int(tokens))
+        blocks = matched + self._take(need_new, force)
+        t = BlockTable(rid, blocks, int(tokens))
+        # register the newly-filled full prefix blocks so later admissions hit
+        n_reg = min(len(prefix_hashes), need_total)
+        for i in range(len(matched), n_reg):
+            if blocks[i] >= self.num_blocks:   # never cache overflow pages
+                n_reg = i
+                break
+            if not self.radix.insert(prefix_hashes[i], blocks[i],
+                                     prefix_hashes[i - 1] if i else None):
+                n_reg = i                      # collision: chain ends here
+                break
+        t.hashes = list(prefix_hashes[:n_reg])
+        self.tables[rid] = t
+        if matched and count_hits:
+            self.prefix_hit_blocks += len(matched)
+            self.prefix_hit_tokens += min(int(tokens),
+                                          len(matched) * self.block_tokens)
+        self.peak_blocks = max(self.peak_blocks, self.used_blocks)
         return True
 
-    def append_tokens(self, rid: int, n: int = 1, force: bool = False) -> bool:
-        """Decode growth: extend by ``n`` token slots, faulting in new blocks
-        as needed. Returns False (and counts a page fault) on exhaustion; the
-        caller resolves it through its preemption policy, falling back to
-        ``force`` when no victim exists."""
-        t = self.tables[rid]
-        assert t.on_device, f"growing swapped-out rid={rid}"
+    def fork(self, parent_rid, child_rid) -> None:
+        """Copy-on-write fork: the child shares every one of the parent's
+        pages (refcount bump, zero new blocks). Divergent decode writes copy
+        only the partial tail block — see ``grow_request``."""
+        pt = self.tables[parent_rid]
+        assert pt.on_device, f"forking swapped-out rid={parent_rid}"
+        assert child_rid not in self.tables
+        for b in pt.blocks:
+            self._incref(b)
+        ct = BlockTable(child_rid, list(pt.blocks), pt.tokens,
+                        hashes=list(pt.hashes))
+        self.tables[child_rid] = ct
+        self.cow_forks += 1
+
+    def _append_need(self, t: BlockTable, n: int) -> Tuple[int, int]:
+        """(new blocks, COW copies) required to append ``n`` token slots."""
         need = self.blocks_for_tokens(t.tokens + n) - len(t.blocks)
-        if need > len(self._free) and not force:
+        cow = 1 if (t.blocks
+                    and self.refcount.get(t.blocks[-1], 1) > 1
+                    and len(t.blocks) * self.block_tokens > t.tokens) else 0
+        return need, cow
+
+    def grow_request(self, rids: Sequence, n: int = 1,
+                     force: bool = False) -> bool:
+        """Decode growth across one request's tables (the main table plus any
+        forked branch tables), appending ``n`` token slots to each. Writing
+        into a *shared* partial tail block first copies it (copy-on-write) so
+        siblings keep the pre-divergence content. Capacity is checked for the
+        whole group up front; on exhaustion nothing is touched, a page fault
+        is counted, and the caller resolves it through its preemption policy,
+        falling back to ``force`` when no victim exists."""
+        tabs = [self.tables[r] for r in rids]
+        for t in tabs:
+            assert t.on_device, f"growing swapped-out rid={t.rid}"
+        total = sum(self._append_need(t, n)[0] for t in tabs)
+        # COW copies: siblings in this group sharing one tail block need
+        # m - 1 copies (the last keeps the original) — m only if someone
+        # outside the group also references it
+        tails: Counter = Counter(t.blocks[-1] for t in tabs
+                                 if self._append_need(t, n)[1])
+        for b, m in tails.items():
+            total += m if self.refcount[b] > m else m - 1
+        if total > self.available_blocks and not force:
             self.page_faults += 1
             return False
-        if need > 0:
-            t.blocks.extend(self._take(need, force))
-        t.tokens += n
+        for t in tabs:
+            # re-derive per-table: an earlier COW in this group may have
+            # dropped the shared tail's refcount to 1 (last sibling keeps it)
+            need, cow = self._append_need(t, n)
+            if cow:
+                old = t.blocks[-1]
+                (new,) = self._take(1, force)
+                t.blocks[-1] = new
+                self._decref(old)
+                self.cow_copied_blocks += 1
+            if need > 0:
+                t.blocks.extend(self._take(need, force))
+            t.tokens += n
         return True
 
-    def free(self, rid: int) -> int:
-        """Release every page of a request (completion/drop). Returns the
-        number of device blocks returned to the free list."""
+    def append_tokens(self, rid, n: int = 1, force: bool = False) -> bool:
+        """Decode growth for a single table: extend by ``n`` token slots,
+        faulting in new blocks as needed. Returns False (and counts a page
+        fault) on exhaustion."""
+        return self.grow_request([rid], n, force)
+
+    def free(self, rid) -> int:
+        """Release every reference of a request (completion/drop). Returns
+        the number of device blocks returned to the free list; shared blocks
+        survive under their other owners and radix-registered blocks stay
+        resident as evictable cache."""
         t = self.tables.pop(rid, None)
         if t is None:
             return 0
         if t.on_device:
-            return self._give_back(t.blocks)
+            freed = 0
+            # deepest-first so cached chains age leaf-before-parent in LRU
+            for b in reversed(t.blocks):
+                if self._decref(b):
+                    freed += 1
+            return freed
         self.tiers[t.tier - 1].release(len(t.blocks) * self.block_bytes)
         return 0
 
-    def holds(self, rid: int) -> bool:
+    def holds(self, rid) -> bool:
         return rid in self.tables
 
     # -- preemption: swap ----------------------------------------------------
-    def swap_out(self, rid: int) -> Optional[Tuple[float, float]]:
+    def swap_out(self, rid) -> Optional[Tuple[float, float]]:
         """Offload a resident request's pages to the first spill tier with
         room. Returns (bytes_moved, transfer_time) or None when no tier can
-        take them (caller falls back to recompute)."""
+        take them (caller falls back to recompute) — or when any page is
+        shared (refcount > 1): a shared page cannot move without stranding
+        its other owners, so shared victims degrade to recompute."""
         t = self.tables[rid]
         assert t.on_device
         if len(t.blocks) > self.num_blocks:
             return None   # could never swap back in; caller recomputes
+        if any(self.refcount.get(b, 1) > 1 for b in t.blocks):
+            return None   # refcount-1 pages only (radix/fork sharing intact)
         nbytes = len(t.blocks) * self.block_bytes
         for i, tier in enumerate(self.tiers, start=1):
             if tier.has_room(nbytes):
                 tier.reserve(nbytes)
-                self._give_back(t.blocks)
+                for b in t.blocks:
+                    self.radix.unregister(b)   # content leaves the device
+                    self._decref(b)
                 t.blocks = [-1] * len(t.blocks)   # physical ids are tier-side
-                t.tier = i
+                t.tier = i                     # hashes kept: swap_in restores
                 self.evictions += 1
                 self.swap_bytes_out += nbytes
                 return nbytes, tier_transfer_time(nbytes, tier.spec)
         return None
 
-    def swap_in(self, rid: int) -> Optional[Tuple[float, float]]:
+    def swap_in(self, rid) -> Optional[Tuple[float, float]]:
         """Bring a swapped request's pages back to HBM. Returns
         (bytes_moved, transfer_time) or None when HBM lacks free blocks."""
         t = self.tables[rid]
         assert not t.on_device
         n = len(t.blocks)
-        if n > len(self._free):
+        if n > self.available_blocks:
             return None
         tier = self.tiers[t.tier - 1]
         nbytes = n * self.block_bytes
         tier.release(nbytes)
         t.blocks = self._take(n)
         t.tier = DEVICE_TIER
+        # the prefix content is back on device: re-register its chain so
+        # future admissions hit again (a collision — the chain resurfaced
+        # under another block while we were away — truncates ours there)
+        for i, h in enumerate(t.hashes):
+            if not self.radix.insert(h, t.blocks[i],
+                                     t.hashes[i - 1] if i else None):
+                t.hashes = t.hashes[:i]
+                break
         self.swap_ins += 1
         self.swap_bytes_in += nbytes
         return nbytes, tier_transfer_time(nbytes, tier.spec)
 
+    def clear_cache(self) -> int:
+        """Purge every cached (refcount-0) radix block back to the free list
+        — client failure/teardown semantics, where device KV is lost."""
+        n = 0
+        while True:
+            b = self.radix.evict_one()
+            if b is None:
+                break
+            self._free.append(b)
+            n += 1
+        return n
+
     # -- preemption: recompute ----------------------------------------------
-    def drop(self, rid: int) -> int:
-        """Discard a request's pages entirely (recompute preemption)."""
+    def drop(self, rid) -> int:
+        """Discard a request's references entirely (recompute preemption)."""
         released = self.free(rid)
         self.recompute_drops += 1
         return released
 
     # -- reporting -----------------------------------------------------------
     def check_invariants(self):
-        """Free list and block tables must partition [0, num_blocks); live
-        overflow ids must match the overflow counter."""
-        held = [b for t in self.tables.values() if t.on_device
-                for b in t.blocks if b < self.num_blocks]
-        overflow = sum(1 for t in self.tables.values() if t.on_device
-                       for b in t.blocks if b >= self.num_blocks)
-        all_ids = sorted(self._free + held)
-        assert all_ids == list(range(self.num_blocks)), \
+        """Refcounts must equal the number of tables referencing each block;
+        free list, live blocks and cached radix blocks must partition
+        [0, num_blocks); live overflow ids must match the overflow counter."""
+        expect: Counter = Counter()
+        for t in self.tables.values():
+            if t.on_device:
+                expect.update(t.blocks)
+        assert dict(expect) == self.refcount, "refcount drift"
+        live = sorted(b for b in expect if b < self.num_blocks)
+        cached = sorted(self.radix._cached)
+        assert not set(live) & set(cached), "cached block is live"
+        assert sorted(self._free + live + cached) == list(range(self.num_blocks)), \
             "block leak or double allocation"
+        overflow = sum(1 for b in expect if b >= self.num_blocks)
         assert overflow == self._overflow_live, "overflow accounting drift"
+        for b in self.radix.by_block:
+            assert b < self.num_blocks and (b in expect or b in self.radix._cached), \
+                "radix entry points at a non-resident block"
+        shared = sum(1 for rc in self.refcount.values() if rc > 1)
+        assert shared == self._n_shared, "shared-block counter drift"
 
     def stats(self) -> Dict[str, float]:
         return {
             "num_blocks": self.num_blocks,
             "used_blocks": self.used_blocks,
             "free_blocks": self.free_blocks,
+            "cached_blocks": self.cached_blocks,
             "peak_blocks": self.peak_blocks,
             "block_tokens": self.block_tokens,
             "utilization": self.used_blocks / max(1, self.num_blocks),
@@ -319,5 +637,15 @@ class PagedKVAllocator:
             "recompute_drops": self.recompute_drops,
             "overflow_blocks": self._overflow_live,
             "overcommitted_blocks": self.overcommitted_blocks,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_blocks": self.prefix_hit_blocks,
+            "cow_forks": self.cow_forks,
+            "cow_copied_blocks": self.cow_copied_blocks,
+            "radix_evictions": self.radix_evictions,
+            "shared_blocks": self.shared_blocks_peak,
+            "block_refs_total": self.block_refs_total,
+            "blocks_allocated_total": self.blocks_allocated_total,
+            "dedup_ratio": (self.block_refs_total
+                            / max(1, self.blocks_allocated_total)),
             "tier_used_bytes": {t.spec.name: t.used for t in self.tiers},
         }

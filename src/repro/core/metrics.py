@@ -45,12 +45,20 @@ class MetricsCollector:
         # wire-side swap traffic observed by the coordinator ...
         self.swap_events: int = 0
         self.swap_bytes: float = 0.0
+        # prefill->decode KV bytes that never shipped because the decode
+        # client's radix cache already held the prefix pages
+        self.kv_transfer_dedup_bytes: float = 0.0
         # ... and allocator counters aggregated over clients at run() end
         # (clients retired mid-run fold into _kv_retired so their history
         # survives removal; collect_kv recomputes, so it is idempotent)
         _zero = {"page_faults": 0, "admission_failures": 0, "evictions": 0,
                  "swap_ins": 0, "swap_bytes_out": 0.0, "swap_bytes_in": 0.0,
-                 "recompute_drops": 0, "peak_blocks": 0}
+                 "recompute_drops": 0, "peak_blocks": 0,
+                 # shared-prefix radix cache (PR 2)
+                 "prefix_hit_tokens": 0, "prefix_hit_blocks": 0,
+                 "cow_forks": 0, "cow_copied_blocks": 0,
+                 "radix_evictions": 0, "shared_blocks": 0,
+                 "block_refs_total": 0, "blocks_allocated_total": 0}
         self.kv: Dict[str, float] = dict(_zero)
         self._kv_retired: Dict[str, float] = dict(_zero)
 
@@ -67,10 +75,13 @@ class MetricsCollector:
             self.swap_events += 1
             self.swap_bytes += nbytes
 
-    @staticmethod
-    def _fold_kv(totals: Dict[str, float], stats: Dict):
+    # high-water-mark counters fold with max, the rest accumulate
+    _KV_PEAKS = ("peak_blocks", "shared_blocks")
+
+    @classmethod
+    def _fold_kv(cls, totals: Dict[str, float], stats: Dict):
         for k in totals:
-            if k == "peak_blocks":
+            if k in cls._KV_PEAKS:
                 totals[k] = max(totals[k], stats.get(k, 0))
             else:
                 totals[k] += stats.get(k, 0)
@@ -139,8 +150,13 @@ class MetricsCollector:
         s["preemptions"] = sum(r.preemptions for r in self.serviced)
         s["swap_events"] = self.swap_events
         s["swap_bytes"] = self.swap_bytes
+        s["kv_transfer_dedup_bytes"] = self.kv_transfer_dedup_bytes
         for k, v in self.kv.items():
             s[f"kv_{k}"] = v
+        # logical block references per physical block allocated (>= 1; 1 means
+        # no page was ever shared) — the radix cache's dedup factor
+        s["kv_dedup_ratio"] = (self.kv["block_refs_total"]
+                               / max(1, self.kv["blocks_allocated_total"]))
         if slo is not None:
             s["slo_ok"] = self.slo_satisfied(slo)
             s["goodput_tok_s"] = self.goodput(slo, horizon)

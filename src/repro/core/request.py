@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 # stage kinds
 PREPROCESS = "preprocess"
@@ -40,6 +40,13 @@ class Request:
     branches: int = 1                  # multi-path reasoning thought branches
     cached_tokens: int = 0             # KV tokens recovered by kv_retrieval
     rag_tokens: int = 0                # context tokens added by RAG
+    # shared-prefix identity: ordered (content_id, n_tokens) segments covering
+    # the *leading* part of the prompt (system prompt, reused RAG chunks, ...).
+    # Two requests with equal leading segments share a block-aligned KV prefix
+    # in the radix cache; everything past the segments is unique content.
+    prefix_segments: Tuple[Tuple[str, int], ...] = ()
+    _prefix_hash_cache: Dict[int, List[int]] = field(default_factory=dict,
+                                                     repr=False)
     # --- runtime state ---
     stage_idx: int = 0
     prefilled_tokens: int = 0
@@ -73,6 +80,26 @@ class Request:
     @property
     def remaining_tokens(self) -> int:
         return max(0, self.output_tokens - self.decoded_tokens)
+
+    def prefix_block_hashes(self, block_tokens: int) -> List[int]:
+        """Chained content hashes for the full, block-aligned blocks covered
+        by ``prefix_segments`` — the keys the radix cache shares pages under.
+        Hash i chains over hash i-1, so equal chains imply equal prefixes."""
+        if not self.prefix_segments:
+            return []
+        cached = self._prefix_hash_cache.get(block_tokens)
+        if cached is not None:
+            return cached
+        ids: List[Tuple[str, int]] = []
+        for seg, n in self.prefix_segments:
+            ids.extend((seg, j) for j in range(n))
+        out: List[int] = []
+        h = 0
+        for i in range(len(ids) // block_tokens):
+            h = hash((h, tuple(ids[i * block_tokens:(i + 1) * block_tokens])))
+            out.append(h)
+        self._prefix_hash_cache[block_tokens] = out
+        return out
 
     def advance_stage(self, now: float):
         st = self.current_stage

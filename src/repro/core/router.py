@@ -1,7 +1,7 @@
-"""Routing & load balancing (paper §III-B1): Round-Robin, Load-based and
-Heavy-Light split, each parameterizable by 4 load metrics (input len, output
-len, KV size, tokens remaining) — the paper's "up to nine distinct routing
-strategies". Modular: subclass Router and register.
+"""Routing & load balancing (paper §III-B1): Round-Robin, Load-based,
+Heavy-Light split and Prefix-Affinity, each parameterizable by load metrics
+(input len, output len, KV size, tokens remaining) — the paper's "up to nine
+distinct routing strategies". Modular: subclass Router and register.
 """
 from __future__ import annotations
 
@@ -65,6 +65,28 @@ class HeavyLightRouter(Router):
         return min(pool, key=lambda c: c.load(self.metric))
 
 
+class PrefixAffinityRouter(Router):
+    """Cache-aware placement: prefer the client whose radix cache already
+    holds the longest prefix of the request's prompt (its pages get mapped,
+    not recomputed), tie-breaking — and falling back for identity-less
+    requests — on a load metric. Hits below ``min_hit_tokens`` are ignored
+    so a stale one-block hit cannot override load balance."""
+
+    name = "prefix_affinity"
+
+    def __init__(self, metric: str = "queue", min_hit_tokens: int = 64):
+        assert metric in LOAD_METRICS, metric
+        self.metric = metric
+        self.min_hit_tokens = min_hit_tokens
+
+    def route(self, req, candidates, now):
+        hits = {c.name: c.prefix_hit_tokens(req) for c in candidates}
+        best = max(hits.values())
+        if best >= self.min_hit_tokens:
+            candidates = [c for c in candidates if hits[c.name] == best]
+        return min(candidates, key=lambda c: c.load(self.metric))
+
+
 def make_router(policy: str = "round_robin", metric: str = "queue",
                 **kw) -> Router:
     if policy == "round_robin":
@@ -73,4 +95,6 @@ def make_router(policy: str = "round_robin", metric: str = "queue",
         return LoadBasedRouter(metric)
     if policy == "heavy_light":
         return HeavyLightRouter(metric=metric, **kw)
+    if policy == "prefix_affinity":
+        return PrefixAffinityRouter(metric=metric, **kw)
     raise ValueError(policy)

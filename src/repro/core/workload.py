@@ -83,6 +83,14 @@ class WorkloadConfig:
     reasoning_scale: float = 8.0
     reasoning_branches: int = 1
     postprocess: bool = True
+    # shared-prefix knobs (all off by default -> no overlapping prefixes and
+    # PR-1-identical behavior). When on, prompts carry ``prefix_segments`` so
+    # the radix cache can actually dedup pages across requests:
+    shared_prefix_pool: int = 0             # distinct system prompts (0 = off)
+    shared_prefix_tokens: int = 512         # tokens per pooled system prompt
+    prefix_reuse_rate: float = 1.0          # P(request draws from the pool)
+    rag_chunk_pool: int = 0                 # distinct RAG chunks (0 = fiat
+    rag_chunk_tokens: int = 500             #   rag_added_tokens, no identity)
 
 
 def generate(cfg: WorkloadConfig) -> List[rq.Request]:
@@ -103,12 +111,48 @@ def generate(cfg: WorkloadConfig) -> List[rq.Request]:
             raise ValueError(cfg.pipeline)
         r = rq.Request(arrival=float(t), input_tokens=int(i),
                        output_tokens=int(o), stages=stages, model=cfg.model)
+        segments: List = []
+        if cfg.shared_prefix_pool > 0:
+            # pooled system prompt, *prepended* so it is a block-aligned
+            # shareable prefix; a (1 - reuse_rate) fraction gets a unique one
+            if rng.random() < cfg.prefix_reuse_rate:
+                k = int(rng.integers(cfg.shared_prefix_pool))
+                seg_id = f"sys{k}"
+            else:
+                seg_id = f"uniq{r.rid}"
+            segments.append((seg_id, cfg.shared_prefix_tokens))
+            r.input_tokens += cfg.shared_prefix_tokens
         if cfg.pipeline == "rag":
-            r.rag_tokens = cfg.rag_added_tokens
+            if cfg.rag_chunk_pool > 0:
+                # retrieved chunks drawn from a shared corpus follow the
+                # system prompt, ahead of the unique user query, so repeated
+                # chunk sets stay inside the shareable prefix
+                n_chunks = max(1, cfg.rag_added_tokens // cfg.rag_chunk_tokens)
+                chunks = sorted(set(
+                    int(c) for c in rng.integers(cfg.rag_chunk_pool,
+                                                 size=n_chunks)))
+                segments.extend((f"doc{c}", cfg.rag_chunk_tokens)
+                                for c in chunks)
+                r.rag_tokens = len(chunks) * cfg.rag_chunk_tokens
+            else:
+                r.rag_tokens = cfg.rag_added_tokens
         if cfg.pipeline == "kv":
-            r.cached_tokens = cfg.kv_cached_tokens
             r.input_tokens += cfg.kv_cached_tokens
+            if cfg.shared_prefix_pool > 0:
+                # real lookup mode: the cached context is a pooled shared
+                # prefix; hits (and the prefill discount) come from the radix
+                # cache at admission instead of a fiat cached_tokens grant.
+                # The retrieval stage still prices fetching the candidate
+                # context (cached_tokens is 0 until the radix hit lands).
+                k = int(rng.integers(cfg.shared_prefix_pool))
+                segments.insert(0, (f"kvctx{k}", cfg.kv_cached_tokens))
+                for st in stages:
+                    if st.kind == rq.KV_RETRIEVAL:
+                        st.params["candidate_tokens"] = cfg.kv_cached_tokens
+            else:
+                r.cached_tokens = cfg.kv_cached_tokens
         if cfg.pipeline == "reasoning":
             rq.reasoning_request(r, cfg.reasoning_scale, cfg.reasoning_branches)
+        r.prefix_segments = tuple(segments)
         out.append(r)
     return out
