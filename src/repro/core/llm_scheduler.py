@@ -203,18 +203,24 @@ class LLMScheduler:
         # prefix hashes dedup handed-off pages against this client's radix
         # cache, but the hit tokens were already counted at the prefill
         # client — count_hits=False keeps the global counters single-counted
+        hashes = self._prefix_hashes(req)
+        resident = self.kv.peek_prefix_tokens(hashes) if hashes else 0
         if not self.kv.allocate(req.rid, req.total_context,
-                                prefix_hashes=self._prefix_hashes(req),
+                                prefix_hashes=hashes,
                                 force=self._oversized(req.total_context),
                                 count_hits=False):
             return False
         if req.rid in self._needs_refetch:
             self._needs_refetch.discard(req.rid)
+            # pages the radix lookup just mapped locally need no wire fetch
+            # — same dedup the coordinator applies to the first handoff
             nbytes = req.total_context * self.kv_per_token
-            self._pending_swap_bytes += nbytes
-            if self.kv.tiers:
-                self._pending_swap_time += tier_transfer_time(
-                    nbytes, self.kv.tiers[0].spec)
+            nbytes -= min(nbytes, resident * self.kv_per_token)
+            if nbytes > 0:
+                self._pending_swap_bytes += nbytes
+                if self.kv.tiers:
+                    self._pending_swap_time += tier_transfer_time(
+                        nbytes, self.kv.tiers[0].spec)
         if req.decoded_tokens == 0:
             req.decoded_tokens = 1   # disagg prefill emitted token #1
         return True

@@ -138,13 +138,16 @@ class BlockTable:
 # ---------------------------------------------------------------------------
 
 class _RadixNode:
-    __slots__ = ("hash", "block", "parent_hash", "children")
+    __slots__ = ("hash", "block", "parent", "children")
 
-    def __init__(self, h: int, block: int, parent_hash: Optional[int]):
+    def __init__(self, h: int, block: int, parent: Optional["_RadixNode"]):
         self.hash = h
         self.block = block
-        self.parent_hash = parent_hash
-        self.children = 0
+        # direct object links, never hashes: a chain hash can resurface as a
+        # *new* node after swap-out/swap-in, and hash-keyed parent accounting
+        # would then corrupt the recreated node's child count
+        self.parent = parent
+        self.children: Dict[int, "_RadixNode"] = {}
 
 
 class RadixBlockIndex:
@@ -176,27 +179,53 @@ class RadixBlockIndex:
         entry and leaves the new block private."""
         if h in self.nodes:
             return False
-        self.nodes[h] = _RadixNode(h, block, parent_hash)
-        self.by_block[block] = h
         parent = self.nodes.get(parent_hash) if parent_hash is not None else None
+        node = _RadixNode(h, block, parent)
+        self.nodes[h] = node
+        self.by_block[block] = h
         if parent is not None:
-            parent.children += 1
+            parent.children[h] = node
         return True
 
     def holds_block(self, block: int) -> bool:
         return block in self.by_block
 
     def unregister(self, block: int):
-        """Drop a block's entry (its content is leaving the device)."""
+        """Drop a block's entry (its content is leaving the device). Unlinks
+        from the exact parent *object* linked at insert, so a parent hash
+        resurfacing under a new node is never touched."""
         h = self.by_block.pop(block, None)
         if h is None:
             return
         node = self.nodes.pop(h)
         self._cached.pop(block, None)
-        parent = (self.nodes.get(node.parent_hash)
-                  if node.parent_hash is not None else None)
-        if parent is not None:
-            parent.children -= 1
+        if node.parent is not None:
+            node.parent.children.pop(h, None)
+
+    def unregister_subtree(self, block: int) -> List[int]:
+        """Unregister a block's node *and every registered descendant* (the
+        swap-out path: when a chain's interior leaves the device, cached
+        descendants must not survive as orphans). Returns the descendant
+        blocks that were cached (refcount 0) — they lost their only reason to
+        stay resident and the caller must return them to the free list.
+        Non-cached descendants belong to the departing table itself (any
+        other live owner would hold the whole prefix, contradicting the
+        caller's refcount-1 precondition) and are merely unregistered."""
+        h = self.by_block.get(block)
+        if h is None:
+            return []
+        freed: List[int] = []
+        stack = list(self.nodes[h].children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            del self.nodes[node.hash]
+            del self.by_block[node.block]
+            if node.block in self._cached:
+                del self._cached[node.block]
+                freed.append(node.block)
+        self.unregister(block)
+        return freed
 
     # -- refcount transitions ---------------------------------------------
     def acquire(self, block: int):
@@ -216,7 +245,7 @@ class RadixBlockIndex:
         not go before them, so chains never get holes). Returns the freed
         physical block id, or None when nothing is evictable."""
         for block in self._cached:
-            if self.nodes[self.by_block[block]].children == 0:
+            if not self.nodes[self.by_block[block]].children:
                 self.unregister(block)
                 return block
         return None
@@ -408,12 +437,15 @@ class PagedKVAllocator:
         need_new = need_total - len(matched)
         # revive matched blocks first: cached ones leave the evictable pool,
         # so the availability check must see the post-match state
+        shared_peak0 = self.shared_blocks_peak
         for b in matched:
             self._incref(b)
         if need_new > self.available_blocks and not force:
             for b in matched:
                 self._decref(b)
-            self.block_refs_total -= len(matched)   # admission never happened
+            # admission never happened: no logical refs, no sharing peak
+            self.block_refs_total -= len(matched)
+            self.shared_blocks_peak = shared_peak0
             self.admission_failures += 1
             return False
         blocks = matched + self._take(need_new, force)
@@ -542,7 +574,12 @@ class PagedKVAllocator:
             if tier.has_room(nbytes):
                 tier.reserve(nbytes)
                 for b in t.blocks:
-                    self.radix.unregister(b)   # content leaves the device
+                    # content leaves the device; cascade so cached descendant
+                    # chains cannot survive as orphans under a parent hash
+                    # that may later resurface as a different node
+                    for fb in self.radix.unregister_subtree(b):
+                        self._free.append(fb)
+                        self.radix_evictions += 1
                     self._decref(b)
                 t.blocks = [-1] * len(t.blocks)   # physical ids are tier-side
                 t.tier = i                     # hashes kept: swap_in restores
@@ -563,6 +600,11 @@ class PagedKVAllocator:
         nbytes = n * self.block_bytes
         tier.release(nbytes)
         t.blocks = self._take(n)
+        # swap-in resumes existing logical references — it must not dilute
+        # dedup_ratio (block_refs_total / blocks_allocated_total) under
+        # preemption churn, so back out _take's counter bumps
+        self.block_refs_total -= n
+        self.blocks_allocated_total -= n
         t.tier = DEVICE_TIER
         # the prefix content is back on device: re-register its chain so
         # future admissions hit again (a collision — the chain resurfaced
@@ -615,6 +657,17 @@ class PagedKVAllocator:
         for b in self.radix.by_block:
             assert b < self.num_blocks and (b in expect or b in self.radix._cached), \
                 "radix entry points at a non-resident block"
+        for h, node in self.radix.nodes.items():
+            for ch, cnode in node.children.items():
+                assert self.radix.nodes.get(ch) is cnode, \
+                    "child link to an unregistered node"
+            if node.parent is not None:
+                # cascade-unregister guarantees no orphans: a registered
+                # node's parent is the *same object* still registered
+                assert self.radix.nodes.get(node.parent.hash) is node.parent, \
+                    "orphaned node (parent left the index)"
+                assert node.parent.children.get(h) is node, \
+                    "registered parent lost its child link"
         shared = sum(1 for rc in self.refcount.values() if rc > 1)
         assert shared == self._n_shared, "shared-block counter drift"
 

@@ -126,14 +126,23 @@ def generate(cfg: WorkloadConfig) -> List[rq.Request]:
             if cfg.rag_chunk_pool > 0:
                 # retrieved chunks drawn from a shared corpus follow the
                 # system prompt, ahead of the unique user query, so repeated
-                # chunk sets stay inside the shareable prefix
+                # chunk sets stay inside the shareable prefix. A retriever
+                # returns k *distinct* chunks — sample without replacement so
+                # the context size matches fiat mode and the knob measures
+                # sharing, not a lighter workload
                 n_chunks = max(1, cfg.rag_added_tokens // cfg.rag_chunk_tokens)
-                chunks = sorted(set(
-                    int(c) for c in rng.integers(cfg.rag_chunk_pool,
-                                                 size=n_chunks)))
+                if cfg.rag_chunk_pool < n_chunks:
+                    raise ValueError(
+                        f"rag_chunk_pool={cfg.rag_chunk_pool} cannot supply "
+                        f"{n_chunks} distinct chunks "
+                        f"(rag_added_tokens/rag_chunk_tokens); a smaller "
+                        f"context would confound sharing sweeps with a "
+                        f"lighter workload")
+                chunks = sorted(int(c) for c in rng.choice(
+                    cfg.rag_chunk_pool, size=n_chunks, replace=False))
                 segments.extend((f"doc{c}", cfg.rag_chunk_tokens)
                                 for c in chunks)
-                r.rag_tokens = len(chunks) * cfg.rag_chunk_tokens
+                r.rag_tokens = n_chunks * cfg.rag_chunk_tokens
             else:
                 r.rag_tokens = cfg.rag_added_tokens
         if cfg.pipeline == "kv":
@@ -144,8 +153,14 @@ def generate(cfg: WorkloadConfig) -> List[rq.Request]:
                 # cache at admission instead of a fiat cached_tokens grant.
                 # The retrieval stage still prices fetching the candidate
                 # context (cached_tokens is 0 until the radix hit lands).
+                # It follows the system prompt so the most-widely-shared
+                # segment stays the leading block-aligned prefix. Note
+                # prefix_reuse_rate therefore gates the *entire* prefix: a
+                # request that drew a unique system prompt diverges at block
+                # 0 and its kv context cannot hit either — exactly how a
+                # radix cache behaves when the leading segment differs.
                 k = int(rng.integers(cfg.shared_prefix_pool))
-                segments.insert(0, (f"kvctx{k}", cfg.kv_cached_tokens))
+                segments.append((f"kvctx{k}", cfg.kv_cached_tokens))
                 for st in stages:
                     if st.kind == rq.KV_RETRIEVAL:
                         st.params["candidate_tokens"] = cfg.kv_cached_tokens

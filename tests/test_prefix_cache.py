@@ -48,37 +48,46 @@ def _drive(sched, reqs, guard=50_000):
 # allocator properties (hypothesis): refcount conservation
 # ---------------------------------------------------------------------------
 
-@given(ops=st.lists(st.tuples(st.integers(0, 4), st.integers(0, 9),
+@given(ops=st.lists(st.tuples(st.integers(0, 6), st.integers(0, 9),
                               st.integers(1, 120), st.integers(0, 2)),
                     min_size=1, max_size=100),
        block_tokens=st.sampled_from([4, 16]))
 @settings(max_examples=40, deadline=None)
 def test_fork_and_release_never_leak_or_double_free(ops, block_tokens):
-    """Random allocate-with-prefix / fork / append / free / drop sequences:
-    per-block refcounts always equal the number of tables referencing the
-    block, the free list + live + cached blocks partition the pool, and
-    releasing everything (cache included) refills the pool exactly."""
+    """Random allocate-with-prefix / fork / append / free / drop / swap-out /
+    swap-in sequences over partial-prefix sharers (same group, different
+    lengths -> proper-prefix chains): per-block refcounts always equal the
+    number of tables referencing the block, the free list + live + cached
+    blocks partition the pool, swapping a chain interior never strands an
+    orphaned cached descendant, and releasing everything (cache included)
+    refills the pool exactly."""
     kv = PagedKVAllocator(capacity_bytes=300.0 * block_tokens,
                           bytes_per_token=1.0, block_tokens=block_tokens,
                           swap_tiers=(TIER_HOST_DRAM,))
     live = []
     fresh = itertools.count()
     for op, sel, amount, group in ops:
+        on_dev = [r for r in live if kv.tables[r].on_device]
+        swapped = [r for r in live if not kv.tables[r].on_device]
         if op == 0:
             rid = ("r", next(fresh))
             hashes = _chain(group, kv.blocks_for_tokens(amount))
             if kv.allocate(rid, amount, prefix_hashes=hashes):
                 live.append(rid)
-        elif op == 1 and live:
-            kv.append_tokens(live[sel % len(live)], amount)
+        elif op == 1 and on_dev:
+            kv.append_tokens(on_dev[sel % len(on_dev)], amount)
         elif op == 2 and live:
             kv.free(live.pop(sel % len(live)))
-        elif op == 3 and live:
+        elif op == 3 and on_dev:
             child = ("f", next(fresh))
-            kv.fork(live[sel % len(live)], child)
+            kv.fork(on_dev[sel % len(on_dev)], child)
             live.append(child)
         elif op == 4 and live:
             kv.drop(live.pop(sel % len(live)))
+        elif op == 5 and on_dev:
+            kv.swap_out(on_dev[sel % len(on_dev)])   # may refuse (shared)
+        elif op == 6 and swapped:
+            kv.swap_in(swapped[sel % len(swapped)])  # may refuse (no room)
         kv.check_invariants()       # refcount + partition + overflow checks
         assert kv.used_blocks <= kv.num_blocks
     for rid in live:
@@ -176,6 +185,51 @@ def test_swap_refuses_shared_pages():
     assert kv.swap_out(1) is None and kv.swap_out(2) is None
     kv.free(2)
     assert kv.swap_out(1) is not None    # sole owner again: swappable
+    kv.check_invariants()
+
+
+def test_sharing_metrics_unpolluted_by_swap_churn_or_failed_admission():
+    """Swap round-trips resume existing logical references, so dedup_ratio
+    must not dilute under preemption churn; a failed admission rolls its
+    matched-prefix increfs back without recording a phantom sharing peak."""
+    B = 4
+    kv = PagedKVAllocator(capacity_bytes=10.0 * B, bytes_per_token=1.0,
+                          block_tokens=B, swap_tiers=(TIER_HOST_DRAM,))
+    assert kv.allocate("a", 5 * B, prefix_hashes=_chain(0, 5))
+    refs0, alloc0 = kv.block_refs_total, kv.blocks_allocated_total
+    for _ in range(3):
+        assert kv.swap_out("a") is not None
+        assert kv.swap_in("a") is not None
+    assert (kv.block_refs_total, kv.blocks_allocated_total) == (refs0, alloc0)
+    assert kv.stats()["dedup_ratio"] == 1.0      # no sharing ever happened
+    assert kv.allocate("b", 5 * B)               # pool now full
+    assert not kv.allocate("c", 10 * B, prefix_hashes=_chain(0, 5))
+    assert kv.shared_blocks_peak == 0 and kv.stats()["shared_blocks"] == 0
+    kv.check_invariants()
+
+
+def test_swap_out_cascades_orphaned_cached_descendants():
+    """Regression: swapping out the sole owner of a chain interior must
+    cascade-unregister its cached descendants. An orphan surviving under a
+    dangling parent hash corrupted the re-registered parent's child links
+    after swap-in, leaving a cached block permanently unevictable (counted
+    in available_blocks but unreclaimable -> in-budget allocations failed)."""
+    B = 4
+    kv = PagedKVAllocator(capacity_bytes=10.0 * B, bytes_per_token=1.0,
+                          block_tokens=B, swap_tiers=(TIER_HOST_DRAM,))
+    h0, h1 = _chain(9, 2)
+    assert kv.allocate("t1", 2 * B, prefix_hashes=[h0, h1])
+    assert kv.allocate("t2", B, prefix_hashes=[h0])      # shares h0 only
+    kv.free("t1")                     # h1's block cached under parent h0
+    assert kv.cached_blocks == 1
+    assert kv.swap_out("t2") is not None  # h0 leaves: h1 must go with it
+    assert kv.cached_blocks == 0 and kv.free_blocks == kv.num_blocks
+    kv.check_invariants()
+    assert kv.swap_in("t2") is not None   # h0 re-registers as a new node
+    kv.check_invariants()
+    kv.free("t2")
+    assert kv.allocate("t3", kv.num_blocks * B)  # whole pool: cache reclaims
+    assert kv.used_blocks == kv.num_blocks
     kv.check_invariants()
 
 
@@ -278,7 +332,10 @@ def test_kv_pipeline_real_lookup_mode():
                         shared_prefix_pool=1, postprocess=False)
     reqs = generate(wl)
     assert all(r.cached_tokens == 0 for r in reqs)       # nothing is free
-    assert all(r.prefix_segments[0][0] == "kvctx0" for r in reqs)
+    # the widely-shared system prompt leads; the kv context follows it so
+    # both stay inside one shareable block-aligned prefix
+    assert all(r.prefix_segments[0][0] == "sys0" for r in reqs)
+    assert all(r.prefix_segments[1][0] == "kvctx0" for r in reqs)
     # the retrieval stage still prices fetching the candidate context
     from repro.core.request import KV_RETRIEVAL
     for r in reqs:
@@ -293,6 +350,37 @@ def test_kv_pipeline_real_lookup_mode():
     s = m.summary()
     assert s["kv_prefix_hit_tokens"] > 0
     assert sum(r.cached_tokens for r in m.serviced) > 0  # discounts granted
+
+
+def test_rag_chunk_pool_generates_distinct_shareable_chunks():
+    """RAG chunk-identity mode draws k *distinct* pooled chunks (context size
+    equals fiat mode's, so enabling the knob measures sharing rather than a
+    lighter workload), orders them after the system prompt inside the
+    shareable prefix, and produces real radix hits end to end."""
+    wl = WorkloadConfig(trace=SMALL_TRACE, n_requests=16, rate=4.0, seed=3,
+                        pipeline="rag", rag_added_tokens=1500,
+                        rag_chunk_tokens=500, rag_chunk_pool=4,
+                        shared_prefix_pool=1, shared_prefix_tokens=256,
+                        postprocess=False)
+    reqs = generate(wl)
+    for r in reqs:
+        assert r.rag_tokens == 1500               # 3 distinct chunks, always
+        assert r.prefix_segments[0][0] == "sys0"  # system prompt leads
+        docs = [seg for seg, _ in r.prefix_segments[1:]]
+        assert len(docs) == len(set(docs)) == 3
+        assert all(d.startswith("doc") for d in docs)
+    spec = SystemSpec(n_llm_clients=1, with_rag=True, with_pre_post=False)
+    coord = build_system(spec)
+    coord.submit(reqs)
+    m = coord.run()
+    assert len(m.serviced) == 16
+    assert m.summary()["kv_prefix_hit_tokens"] > 0
+    # a pool too small for k distinct chunks would silently lighten the
+    # workload vs fiat mode: refuse it instead
+    with pytest.raises(ValueError, match="distinct chunks"):
+        generate(WorkloadConfig(trace=SMALL_TRACE, n_requests=1, rate=1.0,
+                                seed=3, pipeline="rag", rag_added_tokens=1500,
+                                rag_chunk_tokens=500, rag_chunk_pool=2))
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +406,29 @@ def test_end_to_end_branches_and_sharing_metrics():
     for c in coord.clients.values():
         c.scheduler.kv.check_invariants()
         assert c.kv_stats()["used_blocks"] == 0
+
+
+def test_refetch_pricing_dedups_radix_resident_prefix():
+    """Decode-side refetch after a recompute preemption prices only the
+    non-resident context bytes — the pages the radix lookup maps locally at
+    re-admission ride free, consistent with the coordinator's first-handoff
+    wire dedup."""
+    sched = LLMScheduler("continuous", MODEL, CLUSTER,
+                         limits=SchedulerLimits(max_batch=8))
+    seg = (("sysR", 256),)
+    warm = Request(arrival=0.0, input_tokens=300, output_tokens=8,
+                   stages=[Stage(LLM)], prefix_segments=seg)
+    _drive(sched, [warm])                        # chain stays radix-cached
+    cold = Request(arrival=0.0, input_tokens=300, output_tokens=8,
+                   stages=[Stage(LLM)], prefix_segments=seg)
+    ctx = cold.total_context
+    sched._needs_refetch.add(cold.rid)
+    assert sched._admit_decode(cold)
+    B = sched.kv.block_tokens
+    hit = (256 // B) * B
+    assert hit > 0
+    expected = (ctx - hit) * sched.kv_per_token
+    assert sched._pending_swap_bytes == pytest.approx(expected)
 
 
 def test_disaggregated_handoff_dedups_warm_prefix_bytes():
