@@ -20,6 +20,7 @@ MODULES = [
     "chunk_sweep",       # Fig. 6 chunk axis / Sarathi trade-off
     "spec_decode",       # SIII-E1 optional optimization modeling
     "kernel_bench",      # kernel rooflines
+    "sim_throughput",    # simulator cost: decode fast-forward on vs off
 ]
 
 

@@ -1,0 +1,193 @@
+"""Simulator-throughput benchmark: what a fleet-scale sweep point *costs us*.
+
+Every other benchmark measures the modeled system; this one measures the
+simulator itself — wall-clock seconds, simulated engine steps per wall
+second, and heap events popped — across fleet sizes on a decode-heavy
+scenario (small prompts, ~1k-token outputs, batch 64), with the decode
+fast-forward engine on vs off. It also re-verifies the engine's core
+contract on every scenario it touches: ``MetricsCollector.summary()`` must
+be identical in both modes.
+
+Emits ``BENCH_sim_throughput.json`` next to this file. ``--smoke`` runs the
+single pinned CI scenario; with ``--check`` it exits non-zero when the
+fast-forward event count regresses more than 2x over the pinned budget, when
+the two modes disagree on any summary, or when the smoke speedup collapses.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+if __package__ in (None, ""):                      # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import row
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.llm_scheduler import SchedulerLimits
+from repro.core.metrics import simulator_stats
+from repro.core.workload import synthetic_trace
+
+# decode-heavy fleet scenario: prompts are small, outputs long, arrivals
+# front-loaded (saturating rate, so every client's 64-slot batch fills almost
+# immediately) — the regime every reasoning / batching / KV-tier sweep axis
+# spends most of its simulated time in
+FLEETS = (1, 2, 4)
+REQS_PER_CLIENT = 64
+OUT_TOKENS = 1000
+RATE_PER_CLIENT = 32.0
+REPEATS = 3                     # wall-clock = best of N (first run warms caches)
+SMOKE_FLEET = 2
+SMOKE_REQS_PER_CLIENT = 24
+SMOKE_OUT_TOKENS = 300
+
+# pinned CI budget: heap events popped by the *smoke* scenario with
+# fast-forward on (measured 136; headroom for deterministic drift when
+# scheduling internals change legitimately). --check fails beyond 2x.
+SMOKE_EVENTS_PINNED = 200
+# wall-clock floors are advisory only under --check: events popped is the
+# deterministic regression signal; timing on shared CI runners is not.
+SMOKE_MIN_SPEEDUP = 2.0
+TARGET_SPEEDUP = 5.0            # full decode-heavy scenario target
+
+
+def _workload(n_clients: int, reqs_per_client: int, out_tokens: int,
+              seed: int = 9) -> WorkloadConfig:
+    trace = synthetic_trace(input_mean=128, input_std=0.3,
+                            output_mean=out_tokens, output_std=0.15,
+                            name="decode-heavy")
+    return WorkloadConfig(trace=trace, rate=RATE_PER_CLIENT * n_clients,
+                          n_requests=reqs_per_client * n_clients,
+                          process="poisson", postprocess=False, seed=seed)
+
+
+def _run_mode(fast_forward: bool, n_clients: int, reqs_per_client: int,
+              out_tokens: int) -> Tuple[Dict, Dict, float]:
+    spec = SystemSpec(n_llm_clients=n_clients, strategy="continuous",
+                      limits=SchedulerLimits(max_batch=64,
+                                             fast_forward=fast_forward),
+                      with_pre_post=False)
+    coord = build_system(spec)
+    coord.submit(generate(_workload(n_clients, reqs_per_client, out_tokens)))
+    t0 = time.perf_counter()
+    metrics = coord.run()
+    wall = time.perf_counter() - t0
+    return metrics.summary(), simulator_stats(coord), wall
+
+
+def _summaries_equal(a: Dict, b: Dict) -> bool:
+    if set(a) != set(b):
+        return False
+    for k in a:
+        x, y = a[k], b[k]
+        if x == y:
+            continue
+        if isinstance(x, float) and isinstance(y, float) \
+                and math.isnan(x) and math.isnan(y):
+            continue
+        return False
+    return True
+
+
+def _bench_fleet(n_clients: int, reqs_per_client: int,
+                 out_tokens: int) -> Dict:
+    walls_on, walls_off = [], []
+    for _ in range(REPEATS):
+        s_on, st_on, w = _run_mode(True, n_clients, reqs_per_client,
+                                   out_tokens)
+        walls_on.append(w)
+    for _ in range(REPEATS):
+        s_off, st_off, w = _run_mode(False, n_clients, reqs_per_client,
+                                     out_tokens)
+        walls_off.append(w)
+    wall_on, wall_off = min(walls_on), min(walls_off)
+    return {
+        "fleet": n_clients,
+        "n_requests": reqs_per_client * n_clients,
+        "out_tokens": out_tokens,
+        "wall_s_on": wall_on,
+        "wall_s_off": wall_off,
+        "speedup": wall_off / max(wall_on, 1e-9),
+        "events_popped_on": st_on["events_popped"],
+        "events_popped_off": st_off["events_popped"],
+        "micro_steps": st_on["micro_steps"],
+        "micro_steps_off": st_off["micro_steps"],
+        "macro_windows": st_on["macro_windows"],
+        "steps_per_s_on": st_on["micro_steps"] / max(wall_on, 1e-9),
+        "steps_per_s_off": st_off["micro_steps"] / max(wall_off, 1e-9),
+        "summary_match": _summaries_equal(s_on, s_off),
+        "throughput_tok_s": s_on["throughput_tok_s"],
+    }
+
+
+def _write_json(results: List[Dict], smoke: bool) -> str:
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_sim_throughput.json")
+    with open(path, "w") as f:
+        json.dump({"scenario": "decode-heavy fleet (continuous, batch 64)",
+                   "smoke": smoke,
+                   "pinned_smoke_events": SMOKE_EVENTS_PINNED,
+                   "results": results}, f, indent=1)
+    return path
+
+
+def run(smoke: bool = False) -> List[str]:
+    out = []
+    if smoke:
+        grid = [(SMOKE_FLEET, SMOKE_REQS_PER_CLIENT, SMOKE_OUT_TOKENS)]
+    else:
+        grid = [(f, REQS_PER_CLIENT, OUT_TOKENS) for f in FLEETS]
+    results = []
+    for fleet, rpc, out_tok in grid:
+        t0 = time.perf_counter()
+        r = _bench_fleet(fleet, rpc, out_tok)
+        results.append(r)
+        us = (time.perf_counter() - t0) * 1e6
+        out.append(row(
+            f"simtp_fleet{fleet}{'_smoke' if smoke else ''}", us,
+            f"speedup={r['speedup']:.1f}x "
+            f"events={r['events_popped_on']}/{r['events_popped_off']} "
+            f"steps/s={r['steps_per_s_on']:.0f} "
+            f"match={r['summary_match']}"))
+    path = _write_json(results, smoke)
+    out.append(row("simtp_json", 0.0, f"wrote {path} ({len(results)} points)"))
+    return out
+
+
+def check(results_path: str) -> int:
+    """CI gate over the smoke point: events-popped budget (2x pin) and
+    summary equivalence fail hard — both are deterministic. The wall-clock
+    floor is advisory (shared CI runners make timing assertions flaky)."""
+    with open(results_path) as f:
+        data = json.load(f)
+    errors = []
+    smoke = bool(data.get("smoke"))
+    for r in data["results"]:
+        if not r["summary_match"]:
+            errors.append(f"fleet {r['fleet']}: summaries diverge between "
+                          f"fast-forward on/off")
+        if smoke and r["events_popped_on"] > 2 * SMOKE_EVENTS_PINNED:
+            errors.append(f"fleet {r['fleet']}: events popped "
+                          f"{r['events_popped_on']} > 2x pinned budget "
+                          f"{SMOKE_EVENTS_PINNED}")
+        if smoke and r["speedup"] < SMOKE_MIN_SPEEDUP:
+            print(f"CHECK WARNING: fleet {r['fleet']}: speedup "
+                  f"{r['speedup']:.2f}x below advisory floor "
+                  f"{SMOKE_MIN_SPEEDUP}x", file=sys.stderr)
+    for e in errors:
+        print(f"CHECK FAILED: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+    if "--check" in sys.argv:
+        json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "BENCH_sim_throughput.json")
+        raise SystemExit(check(json_path))

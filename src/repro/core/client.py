@@ -5,6 +5,7 @@ disaggregated prefill/decode half).
 """
 from __future__ import annotations
 
+from bisect import bisect_left
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -45,7 +46,8 @@ class Client:
     def has_work(self) -> bool:
         return self.scheduler.has_work()
 
-    def plan_step(self):
+    def plan_step(self, now: Optional[float] = None,
+                  horizon: Optional[float] = None):
         step = self.scheduler.plan_step()
         if step is not None and self.slowdown != 1.0:
             step.duration *= self.slowdown
@@ -53,16 +55,41 @@ class Client:
 
     def finish_step(self, step, now: float) -> List[rq.Request]:
         done = self.scheduler.finish_step(step, now)
-        self.total_energy += getattr(step, "energy", 0.0)
-        self.steps_done += 1
+        # macro-steps carry per-iteration energies; accumulate them in the
+        # order the event loop would so the total stays bit-equal
+        energies = getattr(step, "step_energies", None)
+        for e in (energies if energies is not None
+                  else (getattr(step, "energy", 0.0),)):
+            self.total_energy += e
+        self.steps_done += getattr(step, "n_steps", 1)
         self.served += len(done)
         return done
+
+    def truncate_step(self, step, now: float, inclusive: bool = False):
+        """Commit the finished prefix of an in-flight macro-step (fast
+        forward invalidation); returns the single-step remainder or None.
+        Base clients plan atomic steps only, so there is nothing to cut."""
+        return None
 
     def drain(self) -> List[rq.Request]:
         return self.scheduler.drain()
 
     # load metrics for routing (paper §III-B1) ---------------------------
-    def load(self, metric: str = "queue") -> float:
+    def _window_committed_steps(self, now: Optional[float]) -> int:
+        """Decode iterations of an in-flight fast-forward window that have
+        finished by ``now`` but are not yet materialized. Load metrics fold
+        them in virtually, so routing sees exactly the state a per-step
+        execution would — without the coordinator having to cut the window
+        of every routing *candidate* (only the chosen client's is cut)."""
+        sched = self.scheduler
+        w = getattr(sched, "_window", None)
+        if w is None or now is None:
+            return 0
+        if getattr(sched, "strategy", "") == "static":
+            return 0      # static batches are invisible to load metrics
+        return bisect_left(w.token_times, now)
+
+    def load(self, metric: str = "queue", now: Optional[float] = None) -> float:
         sched = self.scheduler
         waiting = list(getattr(sched, "waiting", []))
         running = (list(getattr(sched, "running", []))
@@ -89,9 +116,14 @@ class Client:
                          for r in waiting)
             return (kv.used_blocks + queued) / max(1, kv.num_blocks)
         if metric == "tokens_remaining":
-            return sum(r.remaining_tokens + max(
+            total = sum(r.remaining_tokens + max(
                 0, r.effective_prefill_tokens - r.prefilled_tokens)
                 for r in waiting + running)
+            j = self._window_committed_steps(now)
+            if j:
+                # every window member decoded j more tokens than materialized
+                total -= j * len(sched._window.decode)
+            return total
         raise ValueError(metric)
 
     def kv_stats(self) -> Dict:
@@ -236,6 +268,28 @@ class LLMClient(Client):
         self.group = group               # local-disaggregation pairing group
         self.scheduler = LLMScheduler(strategy, model_cfg, cluster,
                                       perf=perf, limits=limits, packing=packing)
+
+    def plan_step(self, now: Optional[float] = None,
+                  horizon: Optional[float] = None):
+        """With the absolute clock, the scheduler may fast-forward a stable
+        decode batch into a macro-step; those arrive with the slowdown
+        already folded into every per-iteration time, so only plain single
+        steps take the legacy scaling path here. ``horizon`` (the next known
+        external event) bounds the window so its tail is rarely discarded."""
+        step = self.scheduler.plan_step(now=now, slowdown=self.slowdown,
+                                        horizon=horizon)
+        if step is not None and step.n_steps == 1 and self.slowdown != 1.0:
+            step.duration *= self.slowdown
+        return step
+
+    def truncate_step(self, step, now: float, inclusive: bool = False):
+        if getattr(step, "n_steps", 1) <= 1:
+            return None
+        rem, committed = self.scheduler.truncate_step(step, now, inclusive)
+        for e in committed:
+            self.total_energy += e
+        self.steps_done += len(committed)
+        return rem
 
     @property
     def kv_transfer_bytes_fn(self):

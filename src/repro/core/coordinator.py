@@ -6,6 +6,7 @@ fail/recover/add/remove for fault tolerance and elastic scaling.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -38,24 +39,40 @@ class Coordinator:
         self._active_step: Dict[str, object] = {}
         self._accepted = 0
         self._dispatch_times: Dict[int, float] = {}
+        # times of pending *external* events (everything but step completions)
+        # — the fast-forward planner stops windows at the next one so the
+        # priced tail is rarely discarded by truncate-and-replay
+        self._ext_times: List[float] = []
+
+    def _push_ext(self, time: float, kind: str, payload=None):
+        heapq.heappush(self._ext_times, time)
+        return self.queue.push(time, kind, payload)
+
+    def _ff_horizon(self, now: float) -> Optional[float]:
+        """Earliest pending external event strictly after ``now`` (advisory:
+        a window running past it is still cut correctly by ``_interrupt``)."""
+        h = self._ext_times
+        while h and h[0] <= now:
+            heapq.heappop(h)
+        return h[0] if h else None
 
     # ------------------------------------------------------------------
     def submit(self, requests: List[rq.Request]):
         for r in requests:
             self._accepted += 1
-            self.queue.push(r.arrival, ev.REQUEST_ARRIVAL, r)
+            self._push_ext(r.arrival, ev.REQUEST_ARRIVAL, r)
 
     def schedule_failure(self, client_name: str, at: float,
                          recover_at: Optional[float] = None):
-        self.queue.push(at, ev.CLIENT_FAIL, client_name)
+        self._push_ext(at, ev.CLIENT_FAIL, client_name)
         if recover_at is not None:
-            self.queue.push(recover_at, ev.CLIENT_RECOVER, client_name)
+            self._push_ext(recover_at, ev.CLIENT_RECOVER, client_name)
 
     def schedule_add_client(self, client: Client, at: float):
-        self.queue.push(at, ev.CLIENT_ADD, client)
+        self._push_ext(at, ev.CLIENT_ADD, client)
 
     def schedule_remove_client(self, client_name: str, at: float):
-        self.queue.push(at, ev.CLIENT_REMOVE, client_name)
+        self._push_ext(at, ev.CLIENT_REMOVE, client_name)
 
     # ------------------------------------------------------------------
     # stages that may be absent from a system spec; requests skip them
@@ -88,24 +105,75 @@ class Coordinator:
         if req.done:
             self.metrics.complete(req)
             return
-        client = self.router.route(req, self._candidates(req), now)
+        cands = self._candidates(req)
+        self._sync(cands, now)         # routers must see committed state
+        client = self.router.route(req, cands, now)
         st = req.current_stage
         st.client = client.name
         st.dispatch_time = now
         st.start_time = now
         self._dispatch_times[req.rid] = now
+        if self.cfg.straggler_deadline is not None:
+            # payload carries the arming dispatch time so the deadline guard
+            # compares exactly instead of reconstructing it from floats.
+            # Deliberately NOT an _ext_times entry: a deadline check cannot
+            # perturb a running decode window (it only rescues *queued*
+            # requests, and any resulting re-dispatch interrupts its target
+            # itself), so it must not cap fast-forward window lengths.
+            self.queue.push(now + self.cfg.straggler_deadline,
+                            ev.STRAGGLER_CHECK, (req, now))
+        self._interrupt(client.name, now)  # arrival lands mid-window
         client.add(req)
         self._kick(client, now)
 
     def _kick(self, client: Client, now: float):
         if client.failed or client.name in self._active_step:
             return
-        step = client.plan_step()
+        step = client.plan_step(now, self._ff_horizon(now))
         if step is None:
             return
         self._active_step[client.name] = step
-        self.queue.push(now + step.duration, ev.CLIENT_STEP_DONE,
-                        (client.name, step))
+        end = getattr(step, "end_time", None)
+        self.queue.push(end if end is not None else now + step.duration,
+                        ev.CLIENT_STEP_DONE, (client.name, step))
+
+    # --- decode fast-forward invalidation ------------------------------
+    def _interrupt(self, name: str, now: float, reschedule: bool = True,
+                   inclusive: bool = False):
+        """Truncate-and-replay an in-flight macro-step: commit the
+        iterations that already finished, put the one spanning ``now`` back
+        in flight as a plain step ending at its original boundary (the stale
+        macro CLIENT_STEP_DONE is skipped by the identity check), and let the
+        discarded tail be re-planned. Single steps are atomic in per-step
+        execution too, so they are left untouched."""
+        step = self._active_step.get(name)
+        if step is None or getattr(step, "n_steps", 1) <= 1:
+            return
+        client = self.clients.get(name)
+        if client is None:
+            return
+        del self._active_step[name]
+        rem = client.truncate_step(step, now, inclusive)
+        if rem is not None and reschedule:
+            self._active_step[name] = rem
+            self.queue.push(rem.end_time, ev.CLIENT_STEP_DONE, (name, rem))
+
+    # load metrics whose exact value requires materialized KV block state;
+    # the rest are either invariant mid-window (queue, input_len, output_len)
+    # or folded in virtually by Client.load (tokens_remaining)
+    _KV_EXACT_METRICS = ("kv_size", "kv_pressure")
+
+    def _sync(self, clients, now: float):
+        """Make routing state exact. Routers reading raw allocator state
+        need every candidate's fast-forward window committed up to ``now``;
+        for every other metric ``Client.load(metric, now)`` already reports
+        the virtually-committed value, so the windows of routing *losers*
+        survive untouched (only the chosen client is interrupted, by the
+        caller, before the request is enqueued)."""
+        if getattr(self.router, "metric", None) not in self._KV_EXACT_METRICS:
+            return
+        for c in clients:
+            self._interrupt(c.name, now)
 
     # ------------------------------------------------------------------
     def _account_swap_traffic(self, client: Client, step, now: float):
@@ -135,7 +203,9 @@ class Coordinator:
             self.metrics.complete(req)
             return
         # choose destination now so we can price the wire
-        dst_client = self.router.route(req, self._candidates(req), now)
+        cands = self._candidates(req)
+        self._sync(cands, now)
+        dst_client = self.router.route(req, cands, now)
         nbytes, gran, n_layers = 0.0, "full", 1
         if prev_stage is not None and nxt is not None:
             if prev_stage.kind == rq.PREFILL and nxt.kind == rq.DECODE:
@@ -169,7 +239,7 @@ class Coordinator:
         st.client = dst_client.name
         st.dispatch_time = arrive
         st.start_time = arrive
-        self.queue.push(arrive, ev.TRANSFER_DONE, (req, dst_client.name))
+        self._push_ext(arrive, ev.TRANSFER_DONE, (req, dst_client.name))
 
     # ------------------------------------------------------------------
     def run(self, until: Optional[float] = None) -> MetricsCollector:
@@ -191,6 +261,7 @@ class Coordinator:
                 if client is None or client.failed:
                     self._dispatch(req, now)   # destination died in flight
                 else:
+                    self._interrupt(dst, now)  # arrival lands mid-window
                     client.add(req)
                     self._kick(client, now)
 
@@ -210,7 +281,6 @@ class Coordinator:
                         self.metrics.complete(req)
                     else:
                         self._transfer_and_forward(req, name, now)
-                self._maybe_rescue_stragglers(now)
                 self._kick(client, now)
 
             elif kind == ev.CLIENT_FAIL:
@@ -230,6 +300,17 @@ class Coordinator:
             elif kind == ev.CLIENT_REMOVE:
                 self._on_remove(event.payload, now)
 
+            elif kind == ev.STRAGGLER_CHECK:
+                self._check_straggler(*event.payload, now)
+
+        # horizon cut-off: commit in-flight fast-forward windows up to the
+        # horizon (iterations ending exactly there included — their events
+        # would have fired) so observable state matches per-step execution
+        # truncated at the same time; remainders are rescheduled beyond the
+        # horizon in case run() is resumed.
+        for name in list(self._active_step):
+            self._interrupt(name, horizon, inclusive=True)
+
         self.metrics.collect_kv(self.clients.values())
         return self.metrics
 
@@ -238,6 +319,9 @@ class Coordinator:
         client = self.clients.get(name)
         if client is None:
             return
+        # tokens from already-finished window iterations were streamed to the
+        # user; commit them before the in-flight (remainder) step is lost
+        self._interrupt(name, now, reschedule=False)
         client.failed = True
         self._active_step.pop(name, None)      # in-flight step is lost
         for req in client.drain():             # checkpoint/restart semantics:
@@ -246,6 +330,8 @@ class Coordinator:
             self._dispatch(req, now)
 
     def _on_remove(self, name: str, now: float):
+        if name in self.clients:
+            self._interrupt(name, now, reschedule=False)
         client = self.clients.pop(name, None)
         if client is None:
             return
@@ -254,28 +340,45 @@ class Coordinator:
         for req in client.drain():
             self._dispatch(req, now)
 
-    def _maybe_rescue_stragglers(self, now: float):
-        """Hedged re-dispatch: requests queued past the deadline at a client
-        that has not started them are re-routed (straggler mitigation)."""
+    def _check_straggler(self, req: rq.Request, armed_at: float, now: float):
+        """Hedged re-dispatch (straggler mitigation), armed per dispatch as a
+        deadline event instead of rescanning every client's waiting queue on
+        every step completion: a request still queued — not started — at the
+        client it was dispatched to when its deadline fires is re-routed.
+        A request that cannot be rescued yet (running, or no alternative
+        client) re-arms for another deadline, covering late stragglers the
+        old continuous rescan would have caught (e.g. a preemption dropping
+        it back into a slow client's queue after its first check)."""
         ddl = self.cfg.straggler_deadline
-        if ddl is None:
+        if ddl is None or req.done:
             return
-        for client in list(self.clients.values()):
-            sched = client.scheduler
-            waiting = getattr(sched, "waiting", [])
-            stale = [r for r in waiting
-                     if now - self._dispatch_times.get(r.rid, now) > ddl]
-            for r in stale:
-                cands = self._candidates(r) or []
-                others = [c for c in cands if c is not client]
-                if not others:
-                    continue
-                if hasattr(sched, "remove_waiting"):
-                    sched.remove_waiting(r)   # frees any pages it held
-                else:
-                    waiting.remove(r)
-                r.preemptions += 1
-                self._dispatch(r, now)
+        # re-dispatched since this deadline was armed: a newer one is queued
+        if self._dispatch_times.get(req.rid) != armed_at:
+            return
+        st = req.current_stage
+        client = self.clients.get(st.client) if st.client else None
+        if client is None:
+            return
+        rearm = lambda: self.queue.push(now + ddl, ev.STRAGGLER_CHECK,
+                                        (req, armed_at))
+        if client.failed:
+            rearm()                       # fail-drain will re-dispatch it
+            return
+        sched = client.scheduler
+        waiting = getattr(sched, "waiting", ())
+        if req not in waiting:
+            rearm()                       # running now, may be preempted yet
+            return
+        cands = self._candidates(req) or []
+        if not any(c is not client for c in cands):
+            rearm()                       # nowhere else to go (for now)
+            return
+        if hasattr(sched, "remove_waiting"):
+            sched.remove_waiting(req)     # frees any pages it held
+        else:
+            waiting.remove(req)
+        req.preemptions += 1
+        self._dispatch(req, now)
 
     # ------------------------------------------------------------------
     @property

@@ -16,6 +16,7 @@ CLIENT_FAIL = "client_fail"
 CLIENT_RECOVER = "client_recover"
 CLIENT_ADD = "client_add"                  # elastic scale-out
 CLIENT_REMOVE = "client_remove"
+STRAGGLER_CHECK = "straggler_check"        # per-dispatch rescue deadline
 
 
 @dataclass(order=True)
@@ -31,6 +32,7 @@ class EventQueue:
         self._heap = []
         self._counter = itertools.count()
         self.now = 0.0
+        self.popped = 0     # lifetime pops — the simulator-cost metric
 
     def push(self, time: float, kind: str, payload=None) -> Event:
         assert time >= self.now - 1e-12, (time, self.now, kind)
@@ -44,6 +46,7 @@ class EventQueue:
         ev = heapq.heappop(self._heap)
         # global clock: monotone, no client may run ahead (paper §III-B)
         self.now = max(self.now, ev.time)
+        self.popped += 1
         return ev
 
     def __len__(self):

@@ -14,11 +14,29 @@ shared-prefix blocks are mapped instead of re-allocated, and the hit tokens
 discount the prefill compute (``Request.cached_tokens`` becomes a *real*
 lookup). Multi-branch reasoning requests fork their block table copy-on-write
 on the first divergent decode write, so branches share every prefill page.
+
+Decode fast-forward (``limits.fast_forward``, on by default): when the batch
+composition is provably stable — nothing waiting or swapped, no pending swap
+charges, every decode table on-device with an unshared tail, and the next
+``K`` growth steps fit in the free list — ``plan_step`` returns one
+*macro-step* covering ``K = min(tokens-to-next-completion,
+tokens-to-block-boundary-pressure)`` decode iterations instead of ``K``
+events. Pricing is exact summation: the per-step cost is evaluated at every
+context in the window (bit-equal with per-step execution; the LRU-memoized
+``ClientPerf`` makes repeats cheap), and per-step end times are accumulated
+in the same order the event loop would, so token timestamps, energy and
+every ``kv_*`` counter are identical with the flag on or off. The
+coordinator may *truncate-and-replay* an in-flight window when an external
+event lands mid-window (``truncate_step``).
 """
 from __future__ import annotations
 
+import itertools
+from collections import deque
+from heapq import heappop, heappush
+from bisect import bisect_left, bisect_right
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.memory import PagedKVAllocator, tier_transfer_time
@@ -46,6 +64,10 @@ class SchedulerLimits:
     # workloads without prefix_segments / branches; set False to reproduce
     # the pre-radix (PR 1) allocator behavior exactly.
     prefix_caching: bool = True
+    # decode fast-forward: collapse provably-stable decode windows into one
+    # macro-step event. Metrics-neutral by construction (see module doc);
+    # set False to force one event per decode iteration.
+    fast_forward: bool = True
 
 
 @dataclass
@@ -60,17 +82,134 @@ class LLMStep:
     swap_bytes: float = 0.0
     swap_time: float = 0.0
     preemptions: int = 0
+    # fast-forward macro-step window (n_steps > 1): absolute per-iteration
+    # end times (== token emission times) and the per-iteration cost vectors,
+    # all accumulated in event-loop order so truncation replays exactly
+    n_steps: int = 1
+    end_time: Optional[float] = None   # absolute; None => now + duration
+    token_times: Optional[List[float]] = None
+    step_durations: Optional[List[float]] = None
+    step_energies: Optional[List[float]] = None
+    step_flops: Optional[List[float]] = None
 
     @property
     def n_tokens(self) -> int:
         pre = sum(t for _, t in self.prefill)
         dec = sum(r.branches for r in self.decode)
-        return pre + dec
+        return pre + dec * self.n_steps
+
+
+class WaitQueue:
+    """Admission queue for ``LLMScheduler``.
+
+    ``fcfs`` packing is a deque — ``popleft``/``appendleft`` replace the
+    O(n) list-head ``pop(0)``/``insert(0)`` churn. ``least_work`` packing is
+    an incremental lazy-deletion min-heap keyed on remaining work at push
+    time, replacing the full re-sort previously done on every ``add``.
+    Iteration yields live requests in insertion order (heap order only
+    matters at the head)."""
+
+    def __init__(self, packing: str = "fcfs"):
+        self.packing = packing
+        self._dq: deque = deque()
+        self._heap: List[Tuple[float, int, Request]] = []
+        self._live: Dict[int, Request] = {}    # id(req) -> req (heap mode)
+        self._seq = itertools.count()
+
+    @staticmethod
+    def _work(r: Request) -> int:
+        return r.effective_prefill_tokens + r.remaining_tokens
+
+    def push(self, r: Request):
+        if self.packing == "least_work":
+            heappush(self._heap, (self._work(r), next(self._seq), r))
+            self._live[id(r)] = r
+        else:
+            self._dq.append(r)
+
+    # list-compatible aliases (external drivers/tests enqueue directly)
+    append = push
+
+    def requeue(self, r: Request):
+        """Preempted victim: back to the head (FCFS) / keyed spot (heap)."""
+        if self.packing == "least_work":
+            self.push(r)
+        else:
+            self._dq.appendleft(r)
+
+    def _head(self) -> Optional[Request]:
+        while self._heap:
+            _, _, r = self._heap[0]
+            if id(r) in self._live:
+                return r
+            heappop(self._heap)            # lazily-deleted entry
+        return None
+
+    def peek(self) -> Optional[Request]:
+        if self.packing == "least_work":
+            return self._head()
+        return self._dq[0] if self._dq else None
+
+    def popleft(self) -> Request:
+        if self.packing == "least_work":
+            r = self._head()
+            heappop(self._heap)
+            del self._live[id(r)]
+            return r
+        return self._dq.popleft()
+
+    def remove(self, r: Request) -> bool:
+        if self.packing == "least_work":
+            return self._live.pop(id(r), None) is not None
+        try:
+            self._dq.remove(r)
+            return True
+        except ValueError:
+            return False
+
+    def clear(self):
+        self._dq.clear()
+        self._heap.clear()
+        self._live.clear()
+
+    def __contains__(self, r: Request) -> bool:
+        if self.packing == "least_work":
+            return id(r) in self._live
+        return r in self._dq
+
+    def __iter__(self) -> Iterable[Request]:
+        if self.packing == "least_work":
+            return iter(list(self._live.values()))
+        return iter(self._dq)
+
+    def __reversed__(self):
+        if self.packing == "least_work":
+            # the list version was kept sorted by work, so reversed() meant
+            # heaviest-first — preserve that for victim-selection callers
+            return reversed(sorted(self._live.values(), key=self._work))
+        return reversed(self._dq)
+
+    def __len__(self) -> int:
+        if self.packing == "least_work":
+            return len(self._live)
+        return len(self._dq)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
 
 
 class ClientPerf:
     """Runtime predictor for a client: fitted regression with analytical
-    fallback (paper §III-E1)."""
+    fallback (paper §III-E1).
+
+    Every entry point is memoized through one bounded LRU keyed on the exact
+    argument tuple: identical decode steps — the common case, since a stable
+    batch re-prices the same ``(batch, avg_ctx)`` point every iteration and
+    sweeps revisit whole scenarios — return the cached ``StageCost``
+    (immutable, safely shared) instead of re-running the analytical roofline
+    or the regression predict."""
+
+    MEMO_CAPACITY = 8192
 
     def __init__(self, model_cfg: ModelConfig, cluster: ClusterSpec,
                  use_regression: bool = True):
@@ -78,33 +217,58 @@ class ClientPerf:
         self.cluster = cluster
         self.decode_model = None
         self.prefill_model = None
+        self._memo: Dict[Tuple, ana.StageCost] = {}
         if use_regression:
             from repro.perfmodel import regression as reg
             self.decode_model = reg.fit_decode_model(model_cfg, cluster)
             self.prefill_model = reg.fit_prefill_model(model_cfg, cluster)
 
+    def _memo_get(self, key: Tuple) -> Optional[ana.StageCost]:
+        c = self._memo.pop(key, None)
+        if c is not None:
+            self._memo[key] = c            # refresh recency
+        return c
+
+    def _memo_put(self, key: Tuple, cost: ana.StageCost) -> ana.StageCost:
+        if len(self._memo) >= self.MEMO_CAPACITY:
+            del self._memo[next(iter(self._memo))]   # evict LRU head
+        self._memo[key] = cost
+        return cost
+
     def prefill(self, tokens: int, batch: int, past: int = 0) -> ana.StageCost:
+        key = ("p", tokens, batch, past)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
         c = ana.prefill_time(self.cfg, self.cluster, tokens, batch, past)
         if self.prefill_model is not None:
             t = float(self.prefill_model.predict([past], [tokens], [batch])[0])
             if t > 0:
-                return ana.StageCost(t, c.energy * t / max(c.time, 1e-12),
-                                     c.flops, c.bytes, c.bound)
-        return c
+                c = ana.StageCost(t, c.energy * t / max(c.time, 1e-12),
+                                  c.flops, c.bytes, c.bound)
+        return self._memo_put(key, c)
 
     def decode(self, batch: int, avg_ctx: int) -> ana.StageCost:
+        key = ("d", batch, avg_ctx)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
         c = ana.decode_step_time(self.cfg, self.cluster, batch, avg_ctx)
         if self.decode_model is not None:
             t = float(self.decode_model.predict([batch], [avg_ctx])[0])
             if t > 0:
-                return ana.StageCost(t, c.energy * t / max(c.time, 1e-12),
-                                     c.flops, c.bytes, c.bound)
-        return c
+                c = ana.StageCost(t, c.energy * t / max(c.time, 1e-12),
+                                  c.flops, c.bytes, c.bound)
+        return self._memo_put(key, c)
 
     def chunked(self, chunk_tokens: int, decode_batch: int,
                 avg_ctx: int) -> ana.StageCost:
-        return ana.chunked_step_time(self.cfg, self.cluster, chunk_tokens,
-                                     decode_batch, avg_ctx)
+        key = ("c", chunk_tokens, decode_batch, avg_ctx)
+        hit = self._memo_get(key)
+        if hit is not None:
+            return hit
+        return self._memo_put(key, ana.chunked_step_time(
+            self.cfg, self.cluster, chunk_tokens, decode_batch, avg_ctx))
 
 
 class LLMScheduler:
@@ -120,7 +284,7 @@ class LLMScheduler:
         self.perf = perf or ClientPerf(model_cfg, cluster, use_regression=False)
         self.limits = limits
         self.packing = packing
-        self.waiting: List[Request] = []
+        self.waiting = WaitQueue(packing)
         self.running: List[Request] = []
         self.swapped: List[Request] = []   # preempted-to-tier, awaiting swap-in
         self.chunk_progress: Dict[int, int] = {}   # rid -> prefilled tokens
@@ -146,6 +310,13 @@ class LLMScheduler:
         self.history: List[Dict] = []
         self.total_energy = 0.0
         self.total_tokens = 0
+        # simulator-cost accounting: engine iterations actually simulated
+        # (a macro-step counts n_steps) vs. macro windows planned
+        self.micro_steps = 0
+        self.macro_windows = 0
+        # in-flight fast-forward window, so load metrics can be read
+        # against virtually-committed state without cutting the window
+        self._window: Optional[LLMStep] = None
 
     # ------------------------------------------------------------------
     def add(self, req: Request):
@@ -154,12 +325,9 @@ class LLMScheduler:
             if self._admit_decode(req):
                 self.running.append(req)
             else:
-                self.waiting.append(req)
+                self.waiting.push(req)
         else:
-            self.waiting.append(req)
-        if self.packing == "least_work":
-            self.waiting.sort(key=lambda r: r.effective_prefill_tokens
-                              + r.remaining_tokens)
+            self.waiting.push(req)
 
     # --- prefix sharing -------------------------------------------------
     def _prefix_hashes(self, r: Request) -> List[int]:
@@ -242,7 +410,7 @@ class LLMScheduler:
         out = []
         used = 0
         while self.waiting and len(out) < batch_budget:
-            r = self.waiting[0]
+            r = self.waiting.peek()
             hashes = self._apply_prefix_discount(r)
             toks = r.effective_prefill_tokens
             if out and used + toks > token_budget:
@@ -253,12 +421,20 @@ class LLMScheduler:
             if not self.kv.allocate(r.rid, ctx, prefix_hashes=hashes,
                                     force=self._oversized(ctx)):
                 break
-            self.waiting.pop(0)
+            self.waiting.popleft()
             out.append((r, toks))
             used += toks
         return out
 
-    def plan_step(self) -> Optional[LLMStep]:
+    def plan_step(self, now: Optional[float] = None, slowdown: float = 1.0,
+                  horizon: Optional[float] = None) -> Optional[LLMStep]:
+        """Plan the next engine step. ``now``/``slowdown`` enable decode
+        fast-forward: with the absolute clock known, a stable decode batch is
+        expanded into a macro-step whose per-iteration end times are
+        pre-accumulated (slowdown applied per iteration, exactly as the event
+        loop would). Without ``now`` (direct drivers, non-coordinator use)
+        planning stays strictly per-step; single steps are returned unscaled
+        and the caller applies slowdown as before."""
         self._try_swap_in()
         s = self.strategy
         if s in ("continuous", "prefill_only", "mixed"):
@@ -273,8 +449,111 @@ class LLMScheduler:
         else:
             raise ValueError(s)
         if step is not None:
+            if now is not None:
+                self._maybe_fast_forward(step, now, slowdown, horizon)
             self._attach_pending_swaps(step)
         return step
+
+    # --- decode fast-forward (macro-steps) ------------------------------
+    def _ff_groups(self, dec: List[Request]) -> Optional[List[Tuple[List, int]]]:
+        """Per-request allocator growth groups for a fast-forward window, or
+        None when any request disqualifies the batch: a pending branch fork,
+        an off-device or missing table, or a shared partial tail (the next
+        write would copy-on-write — let the per-step path take it; one step
+        later the tail is private and the window opens)."""
+        kv = self.kv
+        tables = kv.tables
+        # with zero shared blocks device-wide no tail can be shared, so the
+        # per-table COW probe is skipped on the (dominant) unshared path
+        check_tails = kv._n_shared > 0
+        groups: List[Tuple[List, int]] = []
+        for r in dec:
+            if r.output_tokens <= r.decoded_tokens:
+                return None
+            brs = self._branch_rids(r)
+            if brs and not kv.holds(brs[0]):
+                return None                  # fork happens on the next write
+            rids = [r.rid] + brs
+            for rid in rids:
+                t = tables.get(rid)
+                if t is None or t.tier != 0:
+                    return None
+                if check_tails and kv.shared_partial_tail(rid):
+                    return None
+            groups.append((rids, 1 if brs else r.branches))
+        return groups
+
+    def _maybe_fast_forward(self, step: LLMStep, now: float, slowdown: float,
+                            horizon: Optional[float] = None):
+        """Expand a stable pure-decode step into a macro-step in place.
+
+        Stability invariants (all checked here, so the window can only be cut
+        short by an *external* event, which the coordinator handles with
+        truncate-and-replay):
+        * pure decode — no prefill admissions this step, and none possible
+          before the window ends (``waiting`` empty; static batches ignore
+          ``waiting`` until they drain, so it may be non-empty there);
+        * no swapped-out requests to resume and no pending swap/preemption
+          charges to attach;
+        * every table grows preemption-free: the worst-case block demand of
+          the whole window fits in the free list (``max_growth_steps``), so
+          no page fault, radix eviction or victim selection can fire.
+        The window length is ``K = min(tokens-to-next-completion,
+        tokens-to-block-boundary-pressure)``, additionally cut at the first
+        iteration crossing ``horizon`` (the coordinator's next known external
+        event — that iteration would be the one in flight when the event
+        lands, so pricing past it is work truncate-and-replay would discard).
+        Windows of length 1 stay plain steps."""
+        if not self.limits.fast_forward or step.n_steps != 1:
+            return
+        if self.strategy not in ("continuous", "decode_only", "static"):
+            return
+        if step.kind != "decode" or step.prefill or not step.decode:
+            return
+        if self.swapped or (self.waiting and self.strategy != "static"):
+            return
+        if self._pending_swap_bytes or self._pending_swap_time \
+                or self._pending_preemptions:
+            return
+        dec = step.decode
+        groups = self._ff_groups(dec)
+        if groups is None:
+            return
+        k_done = min(r.remaining_tokens for r in dec)
+        k = self.kv.max_growth_steps(groups, k_done)
+        if k <= 1:
+            return
+        batch = sum(r.branches for r in dec)
+        ctx0 = self._avg_ctx(dec)   # grows by exactly 1 per step (stable batch)
+        times: List[float] = []
+        durs: List[float] = []
+        energies: List[float] = []
+        flops: List[float] = []
+        t = now
+        for i in range(k):
+            c = self.perf.decode(batch, ctx0 + i)
+            d = c.time * slowdown if slowdown != 1.0 else c.time
+            t = t + d               # event-loop accumulation order, bit-exact
+            times.append(t)
+            durs.append(d)
+            energies.append(c.energy)
+            flops.append(c.flops)
+            if horizon is not None and t >= horizon:
+                break               # keep the crossing iteration, drop the rest
+        k = len(times)
+        if k <= 1:
+            return
+        step.n_steps = k
+        step.token_times = times
+        step.step_durations = durs
+        step.step_energies = energies
+        step.step_flops = flops
+        step.end_time = times[-1]
+        step.duration = times[-1] - now      # reporting only
+        step.energy = sum(energies)
+        step.flops = sum(flops)
+        self.macro_windows += 1
+        self._window = step
 
     def _attach_pending_swaps(self, step: LLMStep):
         """Charge swap traffic (from preemptions and swap-ins) to this step:
@@ -370,7 +649,7 @@ class LLMScheduler:
         if self.strategy == "decode_only":
             self._needs_refetch.add(victim.rid)
         self._remove_from_pools(victim)
-        self.waiting.insert(0, victim)
+        self.waiting.requeue(victim)
         return True
 
     def _remove_from_pools(self, r: Request):
@@ -436,10 +715,10 @@ class LLMScheduler:
     def _plan_decode_only(self) -> Optional[LLMStep]:
         # admit arrivals that found the pool full at add()
         while self.waiting:
-            r = self.waiting[0]
+            r = self.waiting.peek()
             if not self._admit_decode(r):
                 break
-            self.waiting.pop(0)
+            self.waiting.popleft()
             self.running.append(r)
         if not self.running:
             return None
@@ -454,7 +733,7 @@ class LLMScheduler:
         budget = self.limits.chunk_size - sum(r.branches for r in dec)
         pre: List[Tuple[Request, int]] = []
         while budget > 0 and self.waiting:
-            r = self.waiting[0]
+            r = self.waiting.peek()
             done = self.chunk_progress.get(r.rid, 0)
             if done == 0 and not self.kv.holds(r.rid):
                 hashes = self._apply_prefix_discount(r)
@@ -468,7 +747,7 @@ class LLMScheduler:
             self.chunk_progress[r.rid] = done + take
             budget -= take
             if done + take >= r.effective_prefill_tokens:
-                self.waiting.pop(0)
+                self.waiting.popleft()
             else:
                 break  # head-of-line request still prefilling
         if not pre and not dec:
@@ -504,8 +783,101 @@ class LLMScheduler:
         return int(sum(r.total_context for r in reqs) / len(reqs))
 
     # ------------------------------------------------------------------
+    def _apply_decode_window(self, step: LLMStep, j: int) -> List[Request]:
+        """Commit the first ``j`` iterations of a macro-step: bulk KV growth
+        (one allocator call per request instead of one per token), token
+        emissions at the pre-accumulated per-iteration times, and energy
+        accumulated in the same per-step order the event loop would use.
+        Planning reserved the whole window's worst-case block demand out of
+        the free list, so growth cannot fail. Completions can only happen at
+        the window's final iteration (``K = tokens-to-next-completion``), so
+        a truncated commit (``j < n_steps``) never finishes a request."""
+        finished: List[Request] = []
+        times = step.token_times[:j]
+        for e in step.step_energies[:j]:
+            self.total_energy += e
+        # KV growth is bulk — unless this commit completes a request. A
+        # completion's release interleaves with neighbours' growth in the
+        # per-step loop, so to keep the transient peak_blocks high-water mark
+        # bit-equal the first j-1 iterations grow in bulk (pure monotone
+        # growth: order is transparent to the peak) and the final iteration
+        # replays the per-step grow-emit-release order request by request.
+        def _grow_bulk(r: Request, n: int) -> bool:
+            brs = self._branch_rids(r)
+            if brs:
+                return self.kv.grow_request([r.rid] + brs, n)
+            return self.kv.append_tokens(r.rid, n * r.branches)
+
+        completes = any(r.remaining_tokens == j for r in step.decode)
+        head = j - 1 if completes else j
+        if head > 0:
+            for r in step.decode:
+                if not _grow_bulk(r, head):   # plan reserved this headroom
+                    raise AssertionError(
+                        "fast-forward window overran its reserved headroom")
+        for r in step.decode:
+            if completes and not _grow_bulk(r, 1):
+                raise AssertionError(
+                    "fast-forward window overran its reserved headroom")
+            r.decoded_tokens += j
+            if r.first_token_time is None:
+                r.first_token_time = times[0]
+            r.last_token_time = times[-1]
+            r.token_times.extend(times)
+            self.total_tokens += r.branches * j
+            if r.remaining_tokens <= 0 and self.strategy != "static":
+                finished.append(r)
+                self._release_kv(r)
+                if r in self.running:
+                    self.running.remove(r)
+        if self.strategy == "static" and self.static_batch and \
+                all(r.remaining_tokens <= 0 for r in self.static_batch):
+            for r in self.static_batch:
+                finished.append(r)
+                self._release_kv(r)
+            self.static_batch = []
+        self.micro_steps += j
+        self.history.append({
+            "time": times[-1], "queue": len(self.waiting),
+            "running": len(self.running), "swapped": len(self.swapped),
+            "mem_used": self.kv.used,
+            "kv_util": self.kv.used_blocks / max(1, self.kv.num_blocks),
+            "step_tokens": sum(r.branches for r in step.decode) * j,
+            "kind": step.kind, "steps": j,
+        })
+        return finished
+
+    def truncate_step(self, step: LLMStep, now: float,
+                      inclusive: bool = False
+                      ) -> Tuple[Optional[LLMStep], List[float]]:
+        """Macro-step invalidation (truncate-and-replay): an external event
+        landed at ``now``, mid-window. Commit the prefix of iterations that
+        already finished — strictly before ``now``; ``inclusive`` (horizon
+        cut-off) also commits one ending exactly at ``now`` — and return
+        ``(remainder, committed_energies)``. The remainder is the iteration
+        in flight across ``now``, repackaged as a plain single step ending at
+        its original boundary: exactly the step a per-step execution would
+        have had in flight, so the replay is bit-equal. ``remainder`` is None
+        when the whole window committed (only possible via ``inclusive``)."""
+        self._window = None
+        cut = bisect_right if inclusive else bisect_left
+        j = cut(step.token_times, now)
+        if j > 0:
+            self._apply_decode_window(step, j)
+        if j >= step.n_steps:
+            return None, step.step_energies
+        rem = LLMStep("decode", decode=list(step.decode),
+                      duration=step.step_durations[j],
+                      energy=step.step_energies[j],
+                      flops=step.step_flops[j])
+        rem.end_time = step.token_times[j]
+        return rem, step.step_energies[:j]
+
     def finish_step(self, step: LLMStep, now: float) -> List[Request]:
         """Apply step effects; returns requests whose LLM stage completed."""
+        if step.n_steps > 1:
+            self._window = None
+            return self._apply_decode_window(step, step.n_steps)
         finished: List[Request] = []
         self.total_energy += step.energy
         for r, toks in step.prefill:
@@ -553,11 +925,12 @@ class LLMScheduler:
                 finished.append(r)
                 self._release_kv(r)
             self.static_batch = []
+        self.micro_steps += 1
         self.history.append({
             "time": now, "queue": len(self.waiting), "running": len(self.running),
             "swapped": len(self.swapped), "mem_used": self.kv.used,
             "kv_util": self.kv.used_blocks / max(1, self.kv.num_blocks),
-            "step_tokens": step.n_tokens, "kind": step.kind,
+            "step_tokens": step.n_tokens, "kind": step.kind, "steps": 1,
         })
         return finished
 
@@ -573,8 +946,10 @@ class LLMScheduler:
             if r.decoded_tokens > 1:
                 r.decoded_tokens = max(1, r.decoded_tokens)  # keep emitted tokens
             r.failures += 1
-        self.waiting, self.running, self.static_batch = [], [], []
+        self.waiting.clear()
+        self.running, self.static_batch = [], []
         self.swapped = []
+        self._window = None
         self.chunk_progress.clear()
         self._needs_refetch.clear()
         self.kv.clear_cache()          # a failed client's radix cache is gone

@@ -53,6 +53,8 @@ Three layers live here:
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -154,12 +156,22 @@ class RadixBlockIndex:
     """Block-granular radix cache: a chain of content hashes (each chained
     over its parent, so equal chains imply equal block-aligned prefixes) maps
     to resident physical blocks. Blocks with refcount 0 stay resident as
-    *cached* entries and are evicted leaf-first in LRU order."""
+    *cached* entries and are evicted leaf-first in LRU order.
+
+    Reclaim is O(log n) amortized: instead of rescanning the cached-LRU head
+    for a leaf on every eviction (O(cached²) bulk reclaim), a dedicated
+    evictable-leaf heap holds (release-seq, block) candidates. Entries go
+    stale lazily — when a cached block gains a registered child, or is
+    re-acquired — and are validated at pop; a parent is (re)pushed under its
+    original release seq when its last registered child unregisters, so the
+    eviction *order* is identical to the old head-scan."""
 
     def __init__(self):
         self.nodes: Dict[int, _RadixNode] = {}
         self.by_block: Dict[int, int] = {}       # block id -> hash
-        self._cached: Dict[int, None] = {}       # rc-0 resident blocks, LRU order
+        self._cached: Dict[int, int] = {}        # rc-0 resident block -> seq
+        self._leaf_heap: List[Tuple[int, int]] = []   # (seq, block) candidates
+        self._seq = itertools.count()
 
     # -- lookup ------------------------------------------------------------
     def match(self, chain: Sequence[int]) -> List[int]:
@@ -193,14 +205,21 @@ class RadixBlockIndex:
     def unregister(self, block: int):
         """Drop a block's entry (its content is leaving the device). Unlinks
         from the exact parent *object* linked at insert, so a parent hash
-        resurfacing under a new node is never touched."""
+        resurfacing under a new node is never touched. A cached parent whose
+        last registered child leaves is promoted into the evictable-leaf
+        heap under its original release seq."""
         h = self.by_block.pop(block, None)
         if h is None:
             return
         node = self.nodes.pop(h)
         self._cached.pop(block, None)
-        if node.parent is not None:
-            node.parent.children.pop(h, None)
+        parent = node.parent
+        if parent is not None:
+            parent.children.pop(h, None)
+            if not parent.children:
+                seq = self._cached.get(parent.block)
+                if seq is not None:
+                    heapq.heappush(self._leaf_heap, (seq, parent.block))
 
     def unregister_subtree(self, block: int) -> List[int]:
         """Unregister a block's node *and every registered descendant* (the
@@ -230,11 +249,14 @@ class RadixBlockIndex:
     # -- refcount transitions ---------------------------------------------
     def acquire(self, block: int):
         """Block went refcount 0 -> 1: it is live again, not evictable."""
-        self._cached.pop(block, None)
+        self._cached.pop(block, None)      # heap entry goes stale
 
     def release(self, block: int):
         """Registered block went refcount 1 -> 0: keep resident as cached."""
-        self._cached[block] = None        # (re)append = most recently used
+        seq = next(self._seq)              # (re)release = most recently used
+        self._cached[block] = seq
+        if not self.nodes[self.by_block[block]].children:
+            heapq.heappush(self._leaf_heap, (seq, block))
 
     # -- eviction ----------------------------------------------------------
     def cached_count(self) -> int:
@@ -243,11 +265,17 @@ class RadixBlockIndex:
     def evict_one(self) -> Optional[int]:
         """Evict the LRU cached *leaf* (a node with registered children may
         not go before them, so chains never get holes). Returns the freed
-        physical block id, or None when nothing is evictable."""
-        for block in self._cached:
-            if not self.nodes[self.by_block[block]].children:
-                self.unregister(block)
-                return block
+        physical block id, or None when nothing is evictable. O(log n)
+        amortized: pops stale heap entries (re-acquired, re-released under a
+        newer seq, or currently interior) until a live leaf surfaces."""
+        while self._leaf_heap:
+            seq, block = heapq.heappop(self._leaf_heap)
+            if self._cached.get(block) != seq:
+                continue                   # re-acquired or re-released since
+            if self.nodes[self.by_block[block]].children:
+                continue                   # gained a child; repushed on unlink
+            self.unregister(block)
+            return block
         return None
 
 
@@ -486,6 +514,8 @@ class PagedKVAllocator:
     def _append_need(self, t: BlockTable, n: int) -> Tuple[int, int]:
         """(new blocks, COW copies) required to append ``n`` token slots."""
         need = self.blocks_for_tokens(t.tokens + n) - len(t.blocks)
+        if need < 0:
+            need = 0
         cow = 1 if (t.blocks
                     and self.refcount.get(t.blocks[-1], 1) > 1
                     and len(t.blocks) * self.block_tokens > t.tokens) else 0
@@ -503,6 +533,19 @@ class PagedKVAllocator:
         tabs = [self.tables[r] for r in rids]
         for t in tabs:
             assert t.on_device, f"growing swapped-out rid={t.rid}"
+        if len(tabs) == 1:
+            # single-table fast path (the overwhelmingly common decode case):
+            # no sibling COW accounting, no Counter
+            t = tabs[0]
+            need, cow = self._append_need(t, n)
+            if not cow:
+                if need > self.available_blocks and not force:
+                    self.page_faults += 1
+                    return False
+                if need:
+                    t.blocks.extend(self._take(need, force))
+                t.tokens += n
+                return True
         total = sum(self._append_need(t, n)[0] for t in tabs)
         # COW copies: siblings in this group sharing one tail block need
         # m - 1 copies (the last keeps the original) — m only if someone
@@ -534,6 +577,50 @@ class PagedKVAllocator:
         faulting in new blocks as needed. Returns False (and counts a page
         fault) on exhaustion."""
         return self.grow_request([rid], n, force)
+
+    # -- fast-forward capacity planning --------------------------------------
+    def shared_partial_tail(self, rid) -> bool:
+        """True when the table's last block is shared *and* partially filled,
+        so the next append would copy-on-write it."""
+        t = self.tables[rid]
+        return bool(t.blocks) and self.refcount.get(t.blocks[-1], 1) > 1 \
+            and len(t.blocks) * self.block_tokens > t.tokens
+
+    def max_growth_steps(self, groups: Sequence[Tuple[Sequence, int]],
+                         k_max: int) -> int:
+        """Largest ``K <= k_max`` such that ``K`` growth steps — each step
+        appending ``g`` token slots to every table in ``rids`` for every
+        ``(rids, g)`` group — fit in the free list alone: no radix eviction,
+        no preemption, no overcommit. The decode fast-forward window uses
+        this as its block-boundary-pressure bound; because nothing but the
+        free list is touched, committing the window in bulk is counter-exact
+        with committing it one step at a time. Callers must have ruled out
+        copy-on-write tails (``shared_partial_tail``)."""
+        free = len(self._free)
+        B = self.block_tokens
+        slacks = [(len(t.blocks) * B - t.tokens, g)
+                  for rids, g in groups for t in (self.tables[r] for r in rids)]
+
+        def need(k: int) -> int:
+            total = 0
+            for slack, g in slacks:
+                grow = k * g - slack
+                if grow > 0:
+                    total += -(-grow // B)
+                    if total > free:
+                        break
+            return total
+
+        if need(k_max) <= free:
+            return k_max
+        lo, hi = 0, k_max          # invariant: need(lo) <= free < need(hi)
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if need(mid) <= free:
+                lo = mid
+            else:
+                hi = mid
+        return lo
 
     def free(self, rid) -> int:
         """Release every reference of a request (completion/drop). Returns

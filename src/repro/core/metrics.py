@@ -15,6 +15,23 @@ def percentile(vals: Sequence[float], p: float) -> float:
     return float(np.percentile(np.asarray(vals), p))
 
 
+def simulator_stats(coord) -> Dict[str, float]:
+    """Simulator-cost counters for a finished run: heap events popped, engine
+    iterations actually simulated (fast-forward macro-steps count their full
+    window), windows planned, and per-client step events. Deliberately kept
+    OUT of ``MetricsCollector.summary()`` — the summary is a statement about
+    the modeled system and must be bit-identical whether or not the decode
+    fast-forward engine collapsed the event stream that produced it."""
+    out = {"events_popped": coord.queue.popped,
+           "micro_steps": 0, "macro_windows": 0, "step_events": 0}
+    for c in coord.clients.values():
+        sched = c.scheduler
+        out["micro_steps"] += getattr(sched, "micro_steps", 0)
+        out["macro_windows"] += getattr(sched, "macro_windows", 0)
+        out["step_events"] += len(getattr(sched, "history", ()))
+    return out
+
+
 @dataclass(frozen=True)
 class SLO:
     """Paper Table II: slowdowns over baseline TTFT/TPOT; all six must hold."""

@@ -42,7 +42,7 @@ class LoadBasedRouter(Router):
         self.metric = metric
 
     def route(self, req, candidates, now):
-        return min(candidates, key=lambda c: c.load(self.metric))
+        return min(candidates, key=lambda c: c.load(self.metric, now))
 
 
 class HeavyLightRouter(Router):
@@ -62,7 +62,7 @@ class HeavyLightRouter(Router):
         heavy, light = candidates[:n_heavy], candidates[n_heavy:] or candidates
         work = req.input_tokens + req.output_tokens * req.branches
         pool = heavy if work >= self.threshold else light
-        return min(pool, key=lambda c: c.load(self.metric))
+        return min(pool, key=lambda c: c.load(self.metric, now))
 
 
 class PrefixAffinityRouter(Router):
@@ -84,7 +84,7 @@ class PrefixAffinityRouter(Router):
         best = max(hits.values())
         if best >= self.min_hit_tokens:
             candidates = [c for c in candidates if hits[c.name] == best]
-        return min(candidates, key=lambda c: c.load(self.metric))
+        return min(candidates, key=lambda c: c.load(self.metric, now))
 
 
 def make_router(policy: str = "round_robin", metric: str = "queue",

@@ -7,8 +7,9 @@
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Deque, List, Optional
 
 from repro.core.request import Request
 
@@ -20,13 +21,19 @@ class SimpleStep:
     energy: float = 0.0
 
 
+def _take_head(waiting: Deque[Request], n: int) -> List[Request]:
+    """Pop up to ``n`` requests off the queue head — O(batch), not the
+    O(queue) slice-and-copy the list version paid every step."""
+    return [waiting.popleft() for _ in range(min(n, len(waiting)))]
+
+
 class BatchedScheduler:
     def __init__(self, latency_fn: Callable[[List[Request]], float],
                  max_batch: int = 256, energy_fn=None):
         self.latency_fn = latency_fn
         self.energy_fn = energy_fn
         self.max_batch = max_batch
-        self.waiting: List[Request] = []
+        self.waiting: Deque[Request] = deque()
 
     def add(self, req: Request):
         self.waiting.append(req)
@@ -37,8 +44,7 @@ class BatchedScheduler:
     def plan_step(self) -> Optional[SimpleStep]:
         if not self.waiting:
             return None
-        batch = self.waiting[: self.max_batch]
-        self.waiting = self.waiting[self.max_batch:]
+        batch = _take_head(self.waiting, self.max_batch)
         dur = self.latency_fn(batch)
         en = self.energy_fn(batch, dur) if self.energy_fn else 0.0
         return SimpleStep(batch, dur, en)
@@ -47,7 +53,8 @@ class BatchedScheduler:
         return step.requests
 
     def drain(self) -> List[Request]:
-        out, self.waiting = self.waiting, []
+        out = list(self.waiting)
+        self.waiting.clear()
         return out
 
 
@@ -59,7 +66,7 @@ class SequentialScheduler:
         self.per_request_fn = per_request_fn
         self.energy_fn = energy_fn
         self.n_cores = n_cores
-        self.waiting: List[Request] = []
+        self.waiting: Deque[Request] = deque()
 
     def add(self, req: Request):
         self.waiting.append(req)
@@ -70,8 +77,7 @@ class SequentialScheduler:
     def plan_step(self) -> Optional[SimpleStep]:
         if not self.waiting:
             return None
-        batch = self.waiting[: self.n_cores]
-        self.waiting = self.waiting[self.n_cores:]
+        batch = _take_head(self.waiting, self.n_cores)
         dur = max(self.per_request_fn(r) for r in batch)
         en = self.energy_fn(batch, dur) if self.energy_fn else 0.0
         return SimpleStep(batch, dur, en)
@@ -80,5 +86,6 @@ class SequentialScheduler:
         return step.requests
 
     def drain(self) -> List[Request]:
-        out, self.waiting = self.waiting, []
+        out = list(self.waiting)
+        self.waiting.clear()
         return out

@@ -1,0 +1,344 @@
+"""Decode fast-forward engine: macro-step equivalence (the summary must be
+bit-identical with the engine on or off), truncate-and-replay invalidation,
+the evictable-leaf radix LRU, WaitQueue semantics and the ClientPerf memo."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.llm_scheduler import (ClientPerf, LLMScheduler,
+                                      SchedulerLimits, WaitQueue)
+from repro.core.memory import PagedKVAllocator, RadixBlockIndex
+from repro.core.metrics import simulator_stats
+from repro.core.request import LLM, Request, Stage
+from repro.core.workload import synthetic_trace
+from repro.perfmodel.hardware import ClusterSpec, H100
+
+MODEL = get_config("llama3_70b")
+CLUSTER = ClusterSpec(H100, n_chips=2, tp=2)
+
+
+def _summaries_equal(a, b):
+    if set(a) != set(b):
+        return False, "key sets differ"
+    for k in a:
+        x, y = a[k], b[k]
+        if x == y:
+            continue
+        if isinstance(x, float) and isinstance(y, float) \
+                and math.isnan(x) and math.isnan(y):
+            continue
+        return False, (k, x, y)
+    return True, None
+
+
+def _run(fast_forward, spec_kw=None, wl_kw=None, limits_kw=None, fail_at=None):
+    limits = SchedulerLimits(fast_forward=fast_forward, **(limits_kw or {}))
+    coord = build_system(SystemSpec(limits=limits, **(spec_kw or {})))
+    if fail_at is not None:
+        name = next(n for n in coord.clients
+                    if n.startswith(("llm", "decode", "prefill")))
+        coord.schedule_failure(name, at=fail_at, recover_at=fail_at + 15.0)
+    coord.submit(generate(WorkloadConfig(**(wl_kw or {}))))
+    metrics = coord.run()
+    return coord, metrics
+
+
+def _assert_equivalent(spec_kw=None, wl_kw=None, limits_kw=None,
+                       fail_at=None):
+    c_on, m_on = _run(True, spec_kw, wl_kw, limits_kw, fail_at)
+    c_off, m_off = _run(False, spec_kw, wl_kw, limits_kw, fail_at)
+    ok, diff = _summaries_equal(m_on.summary(), m_off.summary())
+    assert ok, f"summary diverged: {diff}"
+    # request-level: completion times, token counts and emission timestamps
+    assert len(m_on.serviced) == len(m_off.serviced)
+    for a, b in zip(sorted(m_on.serviced, key=lambda r: r.arrival),
+                    sorted(m_off.serviced, key=lambda r: r.arrival)):
+        assert a.completion_time == b.completion_time
+        assert a.decoded_tokens == b.decoded_tokens
+        assert a.token_times == b.token_times
+        assert a.preemptions == b.preemptions
+    assert c_on.total_energy == c_off.total_energy
+    return c_on, c_off
+
+
+# ---------------------------------------------------------------------------
+# equivalence: property sweep over strategies x preemption x prefix workloads
+# ---------------------------------------------------------------------------
+
+@given(strategy=st.sampled_from(["continuous", "static", "chunked", "mixed"]),
+       preemption=st.sampled_from(["swap", "recompute"]),
+       frac=st.sampled_from([1.0, 0.04]),
+       prefix_pool=st.sampled_from([0, 2]),
+       branches=st.sampled_from([1, 3]),
+       n=st.integers(6, 14), rate=st.floats(1.0, 6.0),
+       seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_fast_forward_equivalence_property(strategy, preemption, frac,
+                                           prefix_pool, branches, n, rate,
+                                           seed):
+    wl = dict(n_requests=n, rate=rate, seed=seed,
+              shared_prefix_pool=prefix_pool)
+    if branches > 1:
+        wl.update(pipeline="reasoning", reasoning_branches=branches,
+                  reasoning_scale=3.0)
+    _assert_equivalent(
+        spec_kw=dict(n_llm_clients=2, strategy=strategy),
+        limits_kw=dict(preemption=preemption, kv_capacity_frac=frac),
+        wl_kw=wl)
+
+
+def test_fast_forward_equivalence_disaggregated():
+    _assert_equivalent(
+        spec_kw=dict(strategy="disaggregated", n_prefill=2, n_decode=2),
+        wl_kw=dict(n_requests=18, rate=2.0, seed=7, disaggregated=True))
+
+
+def test_fast_forward_equivalence_under_failure():
+    _assert_equivalent(spec_kw=dict(n_llm_clients=3),
+                       wl_kw=dict(n_requests=18, rate=3.0, seed=11),
+                       fail_at=2.0)
+
+
+def test_fast_forward_equivalence_with_stragglers():
+    def run(ff):
+        coord = build_system(SystemSpec(
+            n_llm_clients=2, straggler_deadline=0.5,
+            router_policy="round_robin",
+            limits=SchedulerLimits(fast_forward=ff)))
+        coord.clients["llm0"].slowdown = 100.0      # 100x straggler
+        coord.submit(generate(WorkloadConfig(n_requests=15, rate=4.0,
+                                             seed=17)))
+        return coord, coord.run()
+    c_on, m_on = run(True)
+    c_off, m_off = run(False)
+    ok, diff = _summaries_equal(m_on.summary(), m_off.summary())
+    assert ok, diff
+    # the deadline-event rescue path must actually fire in this scenario
+    assert sum(r.preemptions for r in m_on.serviced) > 0
+
+
+@pytest.mark.parametrize("metric", ["queue", "tokens_remaining",
+                                    "kv_pressure", "kv_size"])
+def test_fast_forward_equivalence_per_router_metric(metric):
+    """kv_* metrics force candidate-window sync; the rest read virtually
+    committed load — both must stay bit-equal with per-step execution."""
+    _assert_equivalent(
+        spec_kw=dict(n_llm_clients=3, router_metric=metric),
+        wl_kw=dict(n_requests=15, rate=4.0, seed=5))
+
+
+def test_fast_forward_actually_engages_and_cuts_events():
+    """Decode-heavy fleet: the engine must plan real macro windows and pop
+    several times fewer heap events, not just agree on the metrics."""
+    trace = synthetic_trace(128, 0.3, 400, 0.15)
+    wl = dict(trace=trace, rate=32.0, n_requests=32, postprocess=False,
+              seed=9)
+    c_on, m_on = _run(True, dict(n_llm_clients=1, with_pre_post=False),
+                      wl)
+    c_off, m_off = _run(False, dict(n_llm_clients=1, with_pre_post=False),
+                        wl)
+    ok, diff = _summaries_equal(m_on.summary(), m_off.summary())
+    assert ok, diff
+    st_on, st_off = simulator_stats(c_on), simulator_stats(c_off)
+    assert st_on["macro_windows"] > 0
+    assert st_on["micro_steps"] == st_off["micro_steps"]
+    assert st_on["events_popped"] * 3 < st_off["events_popped"]
+
+
+def test_fast_forward_window_invalidation_mid_flight():
+    """An arrival landing mid-window truncates it: the committed prefix and
+    the replayed remainder must reproduce per-step token timestamps."""
+    trace = synthetic_trace(256, 0.2, 300, 0.1)
+    # second wave lands while the first is deep in a decode window
+    wl = dict(trace=trace, rate=1.2, n_requests=10, postprocess=False, seed=3)
+    c_on, m_on = _run(True, dict(n_llm_clients=1, with_pre_post=False), wl)
+    c_off, m_off = _run(False, dict(n_llm_clients=1, with_pre_post=False), wl)
+    assert simulator_stats(c_on)["macro_windows"] > 0
+    for a, b in zip(m_on.serviced, m_off.serviced):
+        assert a.token_times == b.token_times
+    ok, diff = _summaries_equal(m_on.summary(), m_off.summary())
+    assert ok, diff
+
+
+def test_fast_forward_run_horizon_cutoff():
+    """run(until=...) must leave both modes in the same observable state even
+    when the cut lands inside an in-flight window."""
+    trace = synthetic_trace(128, 0.2, 500, 0.1)
+    wl = WorkloadConfig(trace=trace, rate=32.0, n_requests=16,
+                        postprocess=False, seed=9)
+    outs = []
+    for ff in (True, False):
+        coord = build_system(SystemSpec(
+            n_llm_clients=1, with_pre_post=False,
+            limits=SchedulerLimits(fast_forward=ff)))
+        coord.submit(generate(wl))
+        m = coord.run(until=5.0)
+        sched = next(c for c in coord.clients.values()
+                     if c.kind == "llm").scheduler
+        outs.append((sorted(r.decoded_tokens for r in sched.running),
+                     sorted(len(r.token_times) for r in sched.running),
+                     sched.total_tokens, len(m.serviced)))
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# WaitQueue
+# ---------------------------------------------------------------------------
+
+def _req(i, out=8):
+    return Request(arrival=float(i), input_tokens=64 + i,
+                   output_tokens=out, stages=[Stage(LLM)])
+
+
+def test_waitqueue_fcfs_order_and_requeue():
+    q = WaitQueue("fcfs")
+    a, b, c = _req(0), _req(1), _req(2)
+    for r in (a, b, c):
+        q.push(r)
+    assert q.peek() is a and len(q) == 3 and b in q
+    assert q.popleft() is a
+    q.requeue(a)                      # preempted victim returns to the head
+    assert q.peek() is a
+    assert q.remove(b) and not q.remove(b)
+    assert list(q) == [a, c]
+    assert list(reversed(q)) == [c, a]
+    q.clear()
+    assert not q and q.peek() is None
+
+
+def test_waitqueue_least_work_orders_by_remaining_work():
+    q = WaitQueue("least_work")
+    heavy, light, mid = _req(0, out=500), _req(1, out=5), _req(2, out=80)
+    for r in (heavy, light, mid):
+        q.push(r)
+    assert q.peek() is light
+    assert q.popleft() is light
+    assert q.remove(mid)
+    assert q.popleft() is heavy and len(q) == 0
+
+
+def test_waitqueue_least_work_lazy_deletion_skips_removed_head():
+    q = WaitQueue("least_work")
+    light, heavy = _req(0, out=5), _req(1, out=500)
+    q.push(light)
+    q.push(heavy)
+    assert q.remove(light)            # head removed lazily
+    assert q.peek() is heavy and len(q) == 1
+
+
+def test_scheduler_least_work_completes_without_resort():
+    sched = LLMScheduler("continuous", MODEL, CLUSTER, packing="least_work",
+                         limits=SchedulerLimits(max_batch=4))
+    reqs = [_req(i, out=4 + (7 * i) % 13) for i in range(9)]
+    for r in reqs:
+        sched.add(r)
+    now, finished = 0.0, []
+    for _ in range(500):
+        if not sched.has_work():
+            break
+        step = sched.plan_step()
+        now += step.duration
+        finished += sched.finish_step(step, now)
+    assert len(finished) == 9
+
+
+# ---------------------------------------------------------------------------
+# radix evictable-leaf LRU
+# ---------------------------------------------------------------------------
+
+def _chain(tag, n):
+    h, out = hash(tag), []
+    for i in range(n):
+        h = hash((h, i))
+        out.append(h)
+    return out
+
+
+def test_radix_leaf_heap_matches_lru_leaf_first_order():
+    """Eviction must pick the least-recently-cached block whose node is a
+    leaf — the old head-scan semantics: a chain freed deepest-first evicts
+    leaf-to-root in exactly that order."""
+    B = 4
+    kv = PagedKVAllocator(capacity_bytes=100.0 * B, bytes_per_token=1.0,
+                          block_tokens=B)
+    hashes = _chain("a", 3)
+    assert kv.allocate("a", 3 * B, prefix_hashes=hashes)
+    chain_blocks = list(kv.tables["a"].blocks)
+    kv.free("a")    # released deepest-first: leaf is oldest cached
+    evicted = [kv.radix.evict_one() for _ in range(3)]
+    assert evicted == list(reversed(chain_blocks))
+    assert kv.radix.evict_one() is None
+    kv._free.extend(evicted)          # return pages the index handed back
+    kv.check_invariants()
+
+
+def test_radix_parent_promoted_when_last_child_unregisters():
+    B = 4
+    idx = RadixBlockIndex()
+    idx.insert(1, 10, None)
+    idx.insert(2, 11, 1)
+    idx.release(10)                   # cached interior: not evictable yet
+    idx.release(11)
+    assert idx.evict_one() == 11      # leaf goes first
+    assert idx.evict_one() == 10      # parent promoted after child left
+    assert idx.evict_one() is None
+
+
+def test_radix_reacquired_block_not_evicted_via_stale_heap_entry():
+    idx = RadixBlockIndex()
+    idx.insert(1, 10, None)
+    idx.release(10)
+    idx.acquire(10)                   # revived: stale heap entry must not fire
+    assert idx.evict_one() is None
+    idx.release(10)
+    assert idx.evict_one() == 10
+
+
+def test_bulk_reclaim_is_linear_in_evictions():
+    """Reclaiming a deep cached chain must not rescan the cached head per
+    eviction (the old O(cached^2) bulk-reclaim path)."""
+    B = 4
+    n_chain = 200
+    kv = PagedKVAllocator(capacity_bytes=(n_chain + 50.0) * B,
+                          bytes_per_token=1.0, block_tokens=B)
+    assert kv.allocate("deep", n_chain * B,
+                       prefix_hashes=_chain("deep", n_chain))
+    kv.free("deep")
+    assert kv.cached_blocks == n_chain
+    import heapq
+    pops = {"n": 0}
+    orig = heapq.heappop
+
+    def counting_pop(h):
+        pops["n"] += 1
+        return orig(h)
+    heapq.heappop = counting_pop
+    try:
+        freed = kv.clear_cache()
+    finally:
+        heapq.heappop = orig
+    assert freed == n_chain
+    assert pops["n"] <= 3 * n_chain + 10    # amortized O(1) per eviction
+
+
+# ---------------------------------------------------------------------------
+# ClientPerf memoization
+# ---------------------------------------------------------------------------
+
+def test_clientperf_memo_returns_identical_costs_and_is_bounded():
+    perf = ClientPerf(MODEL, CLUSTER, use_regression=False)
+    a = perf.decode(8, 1024)
+    assert perf.decode(8, 1024) is a          # cached object, not recomputed
+    b = perf.prefill(512, 1, 0)
+    assert perf.prefill(512, 1, 0) is b
+    c = perf.chunked(256, 4, 2048)
+    assert perf.chunked(256, 4, 2048) is c
+    for i in range(ClientPerf.MEMO_CAPACITY + 100):
+        perf.decode(1, i)
+    assert len(perf._memo) <= ClientPerf.MEMO_CAPACITY
+    # evicted keys recompute to equal values
+    a2 = perf.decode(8, 1024)
+    assert a2.time == a.time and a2.energy == a.energy
