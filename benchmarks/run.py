@@ -15,6 +15,7 @@ MODULES = [
     "kv_storage",        # Fig. 15
     "kv_paging",         # paged allocator: block x preemption x tier sweep
     "prefix_cache",      # radix cache: branches x reuse x capacity sweep
+    "prefix_migration",  # cross-client migration: BW x reuse x scale-out
     "scaling_clients",   # Fig. 13
     "disaggregation",    # SII-B global/local + SIII-B2 transfer granularity
     "chunk_sweep",       # Fig. 6 chunk axis / Sarathi trade-off

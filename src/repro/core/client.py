@@ -131,6 +131,17 @@ class Client:
         kv = getattr(self.scheduler, "kv", None)
         return kv.stats() if kv is not None else {}
 
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-eligible prompt tokens this client served out
+        of its radix cache (migrated pages included). The per-replica
+        warm-up signal the prefix-migration benchmark tracks: a freshly
+        scaled-out client starts at 0 and converges toward its donor's rate
+        as pushed/fetched chains land."""
+        kv = getattr(self.scheduler, "kv", None)
+        if kv is None or kv.prefix_tokens_seen <= 0:
+            return 0.0
+        return kv.prefix_hit_tokens / kv.prefix_tokens_seen
+
     def prefix_hit_tokens(self, req: rq.Request) -> int:
         """Prompt tokens of ``req`` whose KV pages this client's radix cache
         already holds (0 for non-LLM clients or identity-less requests).

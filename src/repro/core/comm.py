@@ -48,6 +48,17 @@ class Network:
             p = self.default_path or []
         return p
 
+    @staticmethod
+    def _exposed(link: LinkState, nbytes: float, granularity: str,
+                 n_layers: int) -> float:
+        """Exposed latency of one link traversal. Layerwise granularity is
+        overlapped with producer compute: exposed cost ~ one layer of
+        payload + one message latency (Splitwise layerwise mode)."""
+        if granularity == "layerwise":
+            return nbytes / max(1, n_layers) / link.spec.bandwidth \
+                + link.spec.latency
+        return nbytes / link.spec.bandwidth + link.spec.latency
+
     def transfer(self, src: str, dst: str, nbytes: float, now: float,
                  granularity: str = "full", n_layers: int = 1) -> float:
         """Returns the ARRIVAL time of the data at dst (with contention)."""
@@ -58,20 +69,33 @@ class Network:
         for name in path:
             link = self.links[name]
             start = max(t, link.busy_until)
+            exposed = self._exposed(link, nbytes, granularity, n_layers)
             if granularity == "layerwise":
-                # overlapped with producer compute: exposed cost ~ one layer
-                # of payload + one message latency (Splitwise layerwise mode)
-                exposed = nbytes / max(1, n_layers) / link.spec.bandwidth \
-                    + link.spec.latency
-                occupy = nbytes / link.spec.bandwidth  # link still carries it all
+                occupy = nbytes / link.spec.bandwidth  # link carries it all
             else:
-                exposed = nbytes / link.spec.bandwidth + link.spec.latency
                 occupy = exposed
             link.busy_until = start + occupy
             link.bytes_moved += nbytes
             link.transfers += 1
             t = start + exposed
         return t
+
+    def estimate(self, src: str, dst: str, nbytes: float, now: float = 0.0,
+                 granularity: str = "full", n_layers: int = 1) -> float:
+        """Read-only exposed latency of a would-be ``transfer`` (same
+        pricing, current contention included, NO link occupancy or byte
+        accounting). Decision logic — e.g. the router's fetch-vs-recompute
+        trade-off — uses this so probing an option never perturbs the
+        links it decided against using."""
+        path = self.path_for(src, dst)
+        if not path or nbytes <= 0 or src == dst:
+            return 0.0
+        t = now
+        for name in path:
+            link = self.links[name]
+            start = max(t, link.busy_until)
+            t = start + self._exposed(link, nbytes, granularity, n_layers)
+        return t - now
 
     def stats(self) -> Dict[str, Dict]:
         return {k: {"bytes": v.bytes_moved, "transfers": v.transfers}

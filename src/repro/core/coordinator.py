@@ -24,21 +24,34 @@ class CoordinatorConfig:
     kv_transfer_granularity: str = "layerwise"  # full | layerwise
     straggler_deadline: Optional[float] = None  # re-route if queued longer
     max_sim_time: float = 1e7
+    # cross-client radix prefix migration (paper §V-B remote KV retrieval):
+    # ship resident KV prefix chains between clients over the Network
+    # instead of letting a cold replica recompute them from scratch
+    prefix_migration: bool = False
+    migration_granularity: Optional[str] = None  # default: kv_transfer_gran.
+    warm_on_scale_out: bool = True     # push-mode warming on ADD / RECOVER
+    warm_max_blocks: int = 256         # donor block budget per warming push
 
 
 class Coordinator:
     def __init__(self, clients: List[Client], router: Optional[Router] = None,
                  network: Optional[Network] = None,
-                 cfg: CoordinatorConfig = CoordinatorConfig()):
+                 cfg: Optional[CoordinatorConfig] = None):
         self.clients: Dict[str, Client] = {c.name: c for c in clients}
         self.router = router or RoundRobinRouter()
         self.network = network or Network()
-        self.cfg = cfg
+        # a fresh config per coordinator: a shared mutable default would let
+        # one simulation's cfg tweak silently leak into every later one
+        self.cfg = cfg if cfg is not None else CoordinatorConfig()
         self.queue = ev.EventQueue()
         self.metrics = MetricsCollector()
         self._active_step: Dict[str, object] = {}
         self._accepted = 0
         self._dispatch_times: Dict[int, float] = {}
+        # in-flight prefix migrations, keyed (dst, chain): dedup so a burst
+        # of same-prefix routing decisions starts one transfer, not many
+        self._migrations_inflight: set = set()
+        self.router.bind(self)
         # times of pending *external* events (everything but step completions)
         # — the fast-forward planner stops windows at the next one so the
         # priced tail is rarely discarded by truncate-and-replay
@@ -98,12 +111,31 @@ class Coordinator:
             raise RuntimeError(f"no live client serves stage '{stage}'")
         return cands
 
+    def _complete(self, req: rq.Request):
+        """Terminal bookkeeping: straggler dispatch-time entries die with the
+        request (they previously leaked for the whole run)."""
+        self._dispatch_times.pop(req.rid, None)
+        self.metrics.complete(req)
+
+    def _arm_straggler(self, req: rq.Request, at: float):
+        """(Re)arm the per-dispatch rescue deadline. The payload carries the
+        arming dispatch time so the deadline guard compares exactly instead
+        of reconstructing it from floats. Deliberately NOT an _ext_times
+        entry: a deadline check cannot perturb a running decode window (it
+        only rescues *queued* requests, and any resulting re-dispatch
+        interrupts its target itself), so it must not cap fast-forward
+        window lengths."""
+        self._dispatch_times[req.rid] = at
+        if self.cfg.straggler_deadline is not None:
+            self.queue.push(at + self.cfg.straggler_deadline,
+                            ev.STRAGGLER_CHECK, (req, at))
+
     def _dispatch(self, req: rq.Request, now: float):
         """Route current stage to a client (Algorithm 1 'Request-push')."""
         while not req.done and self._candidates(req) is None:
             req.advance_stage(now)     # optional stage with no client: skip
         if req.done:
-            self.metrics.complete(req)
+            self._complete(req)
             return
         cands = self._candidates(req)
         self._sync(cands, now)         # routers must see committed state
@@ -112,16 +144,7 @@ class Coordinator:
         st.client = client.name
         st.dispatch_time = now
         st.start_time = now
-        self._dispatch_times[req.rid] = now
-        if self.cfg.straggler_deadline is not None:
-            # payload carries the arming dispatch time so the deadline guard
-            # compares exactly instead of reconstructing it from floats.
-            # Deliberately NOT an _ext_times entry: a deadline check cannot
-            # perturb a running decode window (it only rescues *queued*
-            # requests, and any resulting re-dispatch interrupts its target
-            # itself), so it must not cap fast-forward window lengths.
-            self.queue.push(now + self.cfg.straggler_deadline,
-                            ev.STRAGGLER_CHECK, (req, now))
+        self._arm_straggler(req, now)
         self._interrupt(client.name, now)  # arrival lands mid-window
         client.add(req)
         self._kick(client, now)
@@ -200,7 +223,7 @@ class Coordinator:
             req.advance_stage(now)     # optional stage with no client: skip
         nxt = req.current_stage
         if nxt is None:
-            self.metrics.complete(req)
+            self._complete(req)
             return
         # choose destination now so we can price the wire
         cands = self._candidates(req)
@@ -239,7 +262,141 @@ class Coordinator:
         st.client = dst_client.name
         st.dispatch_time = arrive
         st.start_time = arrive
+        # the forwarded stage is a fresh dispatch: refresh the straggler
+        # bookkeeping and arm a deadline of its own. Without this, a deadline
+        # armed at the PREVIOUS stage's dispatch still matched the stale
+        # _dispatch_times entry and could preempt a request legitimately
+        # queued at its next stage — and forwarded stages had no straggler
+        # protection at all.
+        self._arm_straggler(req, arrive)
         self._push_ext(arrive, ev.TRANSFER_DONE, (req, dst_client.name))
+
+    # ------------------------------------------------------------------
+    # cross-client radix prefix migration (paper §V-B remote KV retrieval)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _kv_of(client) -> Optional[object]:
+        return getattr(getattr(client, "scheduler", None), "kv", None)
+
+    def maybe_fetch_prefix(self, src: Client, dst: Client, req: rq.Request,
+                           now: float) -> bool:
+        """Fetch-vs-recompute decision (Eq. 1 tier term vs. the analytical
+        prefill model): the router found the warm client overloaded and is
+        about to place ``req`` on ``dst`` cold. Ship the prefix when the
+        wire fetch is cheaper than re-prefilling the same tokens at the
+        destination. Returns True when a migration toward ``dst`` is (now)
+        in flight. Deliberately reads only window-invariant allocator state
+        (radix residency, link occupancy, pure perf models) so the decision
+        is bit-identical with decode fast-forward on or off."""
+        if not self.cfg.prefix_migration:
+            return False
+        src_kv, dst_kv = self._kv_of(src), self._kv_of(dst)
+        if src_kv is None or dst_kv is None or not req.prefix_segments:
+            return False
+        hashes = tuple(req.prefix_block_hashes(src_kv.block_tokens))
+        if not hashes:
+            return False
+        ship = (len(src_kv.radix.match(hashes))
+                - len(dst_kv.radix.match(hashes)))
+        if ship <= 0:
+            return False
+        key = (dst.name, hashes)
+        if key in self._migrations_inflight:
+            return True                    # already warming toward dst
+        nbytes = ship * src_kv.block_bytes
+        gran = self.cfg.migration_granularity \
+            or self.cfg.kv_transfer_granularity
+        n_layers = src.model_cfg.num_layers if isinstance(src, LLMClient) else 1
+        fetch_t = self.network.estimate(src.name, dst.name, nbytes, now,
+                                        granularity=gran, n_layers=n_layers)
+        recompute_t = dst.scheduler.perf.prefill(
+            ship * src_kv.block_tokens, 1).time
+        if fetch_t >= recompute_t:
+            return False                   # recompute wins: let dst rebuild
+        self._migrations_inflight.add(key)
+        self._push_ext(now, ev.PREFIX_MIGRATE,
+                       (src.name, dst.name, hashes, key))
+        return True
+
+    def _warm_client(self, client: Client, now: float):
+        """Push-mode replica warming (CLIENT_ADD / CLIENT_RECOVER): ship the
+        hottest resident prefix chains from the warmest compatible peer so a
+        scaled-out or recovered client serves prefix hits before organic
+        traffic refills it."""
+        if not (self.cfg.prefix_migration and self.cfg.warm_on_scale_out):
+            return
+        if self._kv_of(client) is None:
+            return
+        donors = [c for c in self.clients.values()
+                  if c is not client and not c.failed
+                  and self._kv_of(c) is not None
+                  and set(c.stages) & set(client.stages)]
+        if not donors:
+            return
+        donor = max(donors,
+                    key=lambda c: len(self._kv_of(c).radix.by_block))
+        chains = self._kv_of(donor).hot_chains(self.cfg.warm_max_blocks)
+        for chain in chains:
+            key = (client.name, tuple(chain))
+            if key in self._migrations_inflight:
+                continue
+            self._migrations_inflight.add(key)
+            self._push_ext(now, ev.PREFIX_MIGRATE,
+                           (donor.name, client.name, tuple(chain), key))
+
+    def _start_migration(self, src_name: str, dst_name: str, hashes, key,
+                         now: float):
+        """PREFIX_MIGRATE: pin the source chain and put its bytes on the
+        wire (layerwise or full granularity, like the prefill→decode
+        handoff). MIGRATE_DONE lands as an *external* event so a decode
+        fast-forward window at the destination truncates-and-replays
+        instead of committing state the import would have changed."""
+        src, dst = self.clients.get(src_name), self.clients.get(dst_name)
+        src_kv = self._kv_of(src) if src is not None else None
+        dst_kv = self._kv_of(dst) if dst is not None else None
+        if (src is None or dst is None or src.failed or dst.failed
+                or src_kv is None or dst_kv is None):
+            self._migrations_inflight.discard(key)
+            return
+        # pages the destination already holds need not ship (same wire-side
+        # dedup the prefill→decode handoff applies)
+        skip = len(dst_kv.radix.match(hashes))
+        export = src_kv.export_chain(hashes, skip=skip)
+        if export is None:
+            self._migrations_inflight.discard(key)
+            return
+        handle, n_resident, nbytes = export
+        gran = self.cfg.migration_granularity \
+            or self.cfg.kv_transfer_granularity
+        n_layers = src.model_cfg.num_layers if isinstance(src, LLMClient) else 1
+        arrive = self.network.transfer(src_name, dst_name, nbytes, now,
+                                       granularity=gran, n_layers=n_layers)
+        self.metrics.comm_events += 1
+        self.metrics.comm_bytes += nbytes
+        self._push_ext(arrive, ev.MIGRATE_DONE,
+                       (src_name, dst_name, handle,
+                        tuple(hashes[:n_resident]), nbytes, key))
+
+    def _finish_migration(self, payload, now: float):
+        """MIGRATE_DONE: unpin the source pages and materialize the chain at
+        the destination (collision truncation + free-list-only capacity
+        backpressure happen inside ``import_chain``)."""
+        src_name, dst_name, handle, chain, nbytes, key = payload
+        self._migrations_inflight.discard(key)
+        src = self.clients.get(src_name)
+        src_kv = self._kv_of(src) if src is not None else None
+        if src_kv is not None:
+            src_kv.release_export(handle)
+        dst = self.clients.get(dst_name)
+        dst_kv = self._kv_of(dst) if dst is not None else None
+        if dst is None or dst.failed or dst_kv is None:
+            return        # destination died in flight: bytes spent, pages lost
+        # the import lands mid-window: commit the finished iterations first
+        # so the window's free-list reservation stays exact
+        self._interrupt(dst_name, now)
+        dst_kv.import_chain(list(chain))
+        self.metrics.kv_migrations += 1
+        self.metrics.kv_migrated_bytes += nbytes
 
     # ------------------------------------------------------------------
     def run(self, until: Optional[float] = None) -> MetricsCollector:
@@ -278,7 +435,7 @@ class Coordinator:
                 for req in finished:
                     req.advance_stage(now)
                     if req.done:
-                        self.metrics.complete(req)
+                        self._complete(req)
                     else:
                         self._transfer_and_forward(req, name, now)
                 self._kick(client, now)
@@ -290,11 +447,13 @@ class Coordinator:
                 c = self.clients.get(event.payload)
                 if c is not None:
                     c.failed = False
+                    self._warm_client(c, now)  # its device KV died with it
                     self._kick(c, now)
 
             elif kind == ev.CLIENT_ADD:
                 c: Client = event.payload
                 self.clients[c.name] = c
+                self._warm_client(c, now)      # scaled-out replica is cold
                 self._kick(c, now)
 
             elif kind == ev.CLIENT_REMOVE:
@@ -302,6 +461,12 @@ class Coordinator:
 
             elif kind == ev.STRAGGLER_CHECK:
                 self._check_straggler(*event.payload, now)
+
+            elif kind == ev.PREFIX_MIGRATE:
+                self._start_migration(*event.payload, now)
+
+            elif kind == ev.MIGRATE_DONE:
+                self._finish_migration(event.payload, now)
 
         # horizon cut-off: commit in-flight fast-forward windows up to the
         # horizon (iterations ending exactly there included — their events

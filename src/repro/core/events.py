@@ -17,6 +17,8 @@ CLIENT_RECOVER = "client_recover"
 CLIENT_ADD = "client_add"                  # elastic scale-out
 CLIENT_REMOVE = "client_remove"
 STRAGGLER_CHECK = "straggler_check"        # per-dispatch rescue deadline
+PREFIX_MIGRATE = "prefix_migrate"          # start shipping a radix KV chain
+MIGRATE_DONE = "migrate_done"              # migrated chain landed at dst
 
 
 @dataclass(order=True)

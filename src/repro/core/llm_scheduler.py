@@ -952,6 +952,7 @@ class LLMScheduler:
         self._window = None
         self.chunk_progress.clear()
         self._needs_refetch.clear()
+        self.kv.discard_exports()      # pinned chains died with the device
         self.kv.clear_cache()          # a failed client's radix cache is gone
         self.kv.check_invariants()
         return out

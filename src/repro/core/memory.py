@@ -7,11 +7,14 @@ Three layers live here:
    ``sample_retrieval_latency`` evaluate the paper's recursive cache-lookup
    model over a ``CacheTierSpec`` chain:
 
-       f(KV, C_n) = Hit_n * (T_lookup_n + Size_KV / BW_n)
+       f(KV, C_n) = T_lookup_n + Hit_n * Size_KV / BW_n
                   + (1 - Hit_n) * f(KV, C_{n+1})
 
-   A miss below the last level falls back to ``miss_cost`` — typically
-   prefill recomputation (priced by the analytical model) or a DCN fetch.
+   Every *probed* tier charges its lookup latency — hit or miss — so the
+   analytical expectation and the Monte-Carlo walk agree on the miss path
+   (a probe must pay the directory lookup to learn it missed). A miss below
+   the last level falls back to ``miss_cost`` — typically prefill
+   recomputation (priced by the analytical model) or a DCN fetch.
 
 2. **On-device allocation (``PagedKVAllocator``).** The same tier specs that
    parameterize Eq. 1 back the on-device allocator's spill hierarchy, so the
@@ -50,6 +53,14 @@ Three layers live here:
    may only victimize tables whose pages all have refcount 1 (a shared page
    cannot move without stranding its other owners); shared victims degrade to
    ``recompute``, which merely drops references.
+
+   Resident chains can also *migrate* between allocators (cross-client
+   replica warming, paper §V-B remote KV retrieval): ``export_chain`` pins a
+   source chain for the transfer window, ``import_chain`` materializes it at
+   the destination as cached blocks through the same radix-registration
+   rules (collision truncation, free-list-only capacity backpressure), and
+   ``hot_chains`` enumerates a donor's hottest chains for push-mode warming.
+   The coordinator prices the shipped bytes on ``Network`` links.
 """
 from __future__ import annotations
 
@@ -67,13 +78,16 @@ from repro.perfmodel.hardware import CacheTierSpec
 def expected_retrieval_latency(size_bytes: float,
                                tiers: Sequence[CacheTierSpec],
                                miss_cost: float) -> float:
-    """Paper Eq. 1, evaluated recursively (expected value)."""
+    """Paper Eq. 1, evaluated recursively (expected value). Every probed
+    tier charges its ``lookup_latency`` unconditionally — the same walk the
+    Monte-Carlo ``sample_retrieval_latency`` takes — so the sampled mean
+    converges to this expectation on workloads with deep miss chains."""
     if not tiers:
         return miss_cost
     t = tiers[0]
-    hit_time = t.lookup_latency + size_bytes / t.bandwidth
-    return t.hit_rate * hit_time + (1.0 - t.hit_rate) * expected_retrieval_latency(
-        size_bytes, tiers[1:], miss_cost)
+    return (t.lookup_latency + t.hit_rate * (size_bytes / t.bandwidth)
+            + (1.0 - t.hit_rate) * expected_retrieval_latency(
+                size_bytes, tiers[1:], miss_cost))
 
 
 def sample_retrieval_latency(size_bytes: float, tiers: Sequence[CacheTierSpec],
@@ -258,6 +272,21 @@ class RadixBlockIndex:
         if not self.nodes[self.by_block[block]].children:
             heapq.heappush(self._leaf_heap, (seq, block))
 
+    def peek_seq(self, block: int) -> Optional[int]:
+        """Current cached-LRU seq of a block (None when live/unregistered)."""
+        return self._cached.get(block)
+
+    def restore_seq(self, block: int, seq: int):
+        """Roll back a transient ``acquire`` (failed admission): re-cache the
+        block under its ORIGINAL recency seq, so a stream of rejected
+        admissions cannot keep a prefix artificially hot and perturb the
+        eviction order vs. a trace where they never arrived. Re-pushing the
+        (seq, block) heap entry may duplicate one already present — stale
+        duplicates are skipped at pop, so this is harmless."""
+        self._cached[block] = seq
+        if not self.nodes[self.by_block[block]].children:
+            heapq.heappush(self._leaf_heap, (seq, block))
+
     # -- eviction ----------------------------------------------------------
     def cached_count(self) -> int:
         return len(self._cached)
@@ -334,6 +363,16 @@ class PagedKVAllocator:
         self.blocks_allocated_total = 0  # physical blocks ever taken
         self._n_shared = 0             # blocks with refcount > 1, now
         self.shared_blocks_peak = 0
+        self.prefix_tokens_seen = 0    # prefix-eligible prompt tokens admitted
+        # cross-client prefix migration (export pins resident source chains
+        # for the transfer window; import materializes them as cached blocks)
+        self._exports: Dict[int, List[int]] = {}  # handle -> pinned blocks
+        self._export_seq = itertools.count()
+        self._migrated_in: set = set()  # resident blocks created by import
+        self.migrated_out_blocks = 0
+        self.migrated_in_blocks = 0
+        self.migration_refused_blocks = 0  # import backpressure + collisions
+        self.migration_hit_tokens = 0  # prompt tokens served off migrated pages
 
     # -- capacity queries ---------------------------------------------------
     @property
@@ -375,6 +414,13 @@ class PagedKVAllocator:
                 slack += len(t.blocks) * self.block_tokens - t.tokens
         return slack * self.bytes_per_token
 
+    def _return_free(self, b: int):
+        """Single exit back to the free list: a recycled block id sheds its
+        migrated-in identity so a later unrelated occupant cannot count
+        migration hits."""
+        self._migrated_in.discard(b)
+        self._free.append(b)
+
     # -- refcount plumbing ---------------------------------------------------
     def _incref(self, b: int):
         rc = self.refcount.get(b, 0) + 1
@@ -403,8 +449,19 @@ class PagedKVAllocator:
         if self.radix.holds_block(b):
             self.radix.release(b)          # live -> cached, evictable LRU
             return False
-        self._free.append(b)
+        self._return_free(b)
         return True
+
+    def _unref_matched(self, b: int, orig_seq: Optional[int]):
+        """Failed-admission rollback of one matched-block ``_incref``. A
+        block that was *cached* before the attempt returns to the cache under
+        its ORIGINAL recency seq (``restore_seq``): a rejected admission must
+        not refresh LRU order. Blocks that were live keep the plain decref."""
+        if orig_seq is not None and self.refcount.get(b) == 1:
+            del self.refcount[b]
+            self.radix.restore_seq(b, orig_seq)
+            return
+        self._decref(b)
 
     # -- allocation / growth / release --------------------------------------
     def _reclaim(self, n: int):
@@ -414,7 +471,7 @@ class PagedKVAllocator:
             b = self.radix.evict_one()
             if b is None:
                 break
-            self._free.append(b)
+            self._return_free(b)
             self.radix_evictions += 1
 
     def _take(self, n: int, force: bool = False) -> List[int]:
@@ -466,12 +523,15 @@ class PagedKVAllocator:
         # revive matched blocks first: cached ones leave the evictable pool,
         # so the availability check must see the post-match state
         shared_peak0 = self.shared_blocks_peak
+        orig_seqs = {b: s for b in matched
+                     for s in (self.radix.peek_seq(b),) if s is not None}
         for b in matched:
             self._incref(b)
         if need_new > self.available_blocks and not force:
             for b in matched:
-                self._decref(b)
-            # admission never happened: no logical refs, no sharing peak
+                self._unref_matched(b, orig_seqs.get(b))
+            # admission never happened: no logical refs, no sharing peak,
+            # and previously-cached blocks keep their original LRU seq
             self.block_refs_total -= len(matched)
             self.shared_blocks_peak = shared_peak0
             self.admission_failures += 1
@@ -490,10 +550,19 @@ class PagedKVAllocator:
                 break
         t.hashes = list(prefix_hashes[:n_reg])
         self.tables[rid] = t
+        if prefix_hashes and count_hits:
+            # prefix-eligible tokens this admission presented: the hit-rate
+            # denominator (kv_prefix_hit_tokens / kv_prefix_tokens_seen)
+            self.prefix_tokens_seen += min(int(tokens),
+                                           len(prefix_hashes) * self.block_tokens)
         if matched and count_hits:
             self.prefix_hit_blocks += len(matched)
             self.prefix_hit_tokens += min(int(tokens),
                                           len(matched) * self.block_tokens)
+            mig = sum(1 for b in matched if b in self._migrated_in)
+            if mig:
+                self.migration_hit_tokens += min(int(tokens),
+                                                 mig * self.block_tokens)
         self.peak_blocks = max(self.peak_blocks, self.used_blocks)
         return True
 
@@ -665,7 +734,7 @@ class PagedKVAllocator:
                     # chains cannot survive as orphans under a parent hash
                     # that may later resurface as a different node
                     for fb in self.radix.unregister_subtree(b):
-                        self._free.append(fb)
+                        self._return_free(fb)
                         self.radix_evictions += 1
                     self._decref(b)
                 t.blocks = [-1] * len(t.blocks)   # physical ids are tier-side
@@ -705,6 +774,135 @@ class PagedKVAllocator:
         self.swap_bytes_in += nbytes
         return nbytes, tier_transfer_time(nbytes, tier.spec)
 
+    # -- cross-client prefix migration ---------------------------------------
+    def export_chain(self, prefix_hashes: Sequence[int], skip: int = 0,
+                     max_blocks: Optional[int] = None
+                     ) -> Optional[Tuple[int, int, float]]:
+        """Pin the resident prefix chain for an outbound migration. The
+        pinned blocks (chain positions ``skip`` onward — the part the
+        destination does not already hold) take one extra reference for the
+        transfer window, so neither radix eviction nor swap-out can move
+        their content off-device while it is on the wire. Returns
+        ``(handle, n_resident, nbytes)`` — the caller ships
+        ``prefix_hashes[:n_resident]`` and ``nbytes`` of KV pages, then
+        releases the pin with ``release_export(handle)`` when the transfer
+        lands. None when nothing past ``skip`` is resident."""
+        matched = self.radix.match(prefix_hashes)
+        if max_blocks is not None:
+            matched = matched[:skip + max_blocks]
+        ship = matched[skip:]
+        if not ship:
+            return None
+        for b in ship:
+            self._incref(b)
+        # a transfer pin is not a logical reference (dedup_ratio stays
+        # comparable with migration off), but it DOES count as sharing for
+        # the window: a pinned live page genuinely has two holders, and the
+        # refcount>1 rule is exactly what keeps swap_out off it mid-transfer
+        self.block_refs_total -= len(ship)
+        handle = next(self._export_seq)
+        self._exports[handle] = list(ship)
+        self.migrated_out_blocks += len(ship)
+        return handle, len(matched), len(ship) * self.block_bytes
+
+    def release_export(self, handle: int):
+        """Unpin an outbound migration's source pages (transfer landed or
+        aborted). Previously-cached blocks re-enter the evictable LRU as
+        most-recently-used — the transfer just read them. A handle already
+        discarded by ``discard_exports`` (source failure) is a no-op."""
+        for b in self._exports.pop(handle, ()):
+            self._decref(b)
+
+    def discard_exports(self):
+        """Device KV died (client failure/teardown): drop every in-flight
+        outbound pin so the pinned content cannot outlive the failure as
+        resident cache. Callers follow with ``clear_cache`` — the unpinned
+        blocks land there as cached and are purged with everything else;
+        the in-flight transfer itself still completes at the destination
+        (the bytes were already on the wire)."""
+        for handle in list(self._exports):
+            self.release_export(handle)
+
+    def import_chain(self, prefix_hashes: Sequence[int]) -> Tuple[int, int]:
+        """Materialize a migrated chain as resident *cached* (refcount-0)
+        radix blocks, extending whatever prefix of it is already resident.
+        Future same-prefix admissions map these pages exactly like locally
+        produced ones. Two hard rules:
+
+        * **capacity backpressure** — imports draw on the free list alone:
+          a migrated copy never evicts resident cache, preempts a live
+          table or overcommits. Blocks that do not fit are refused (the
+          leading — most widely shared — part of the chain lands first).
+        * **collision truncation** — a chain hash already registered under
+          another block ends the import there, exactly like admission-time
+          registration (``allocate``) and ``swap_in`` re-registration.
+
+        Returns ``(imported, refused)`` block counts. Imported blocks are
+        tracked so later admission hits on them surface as
+        ``migration_hit_tokens`` (the fetch actually saved recompute);
+        ``blocks_allocated_total`` is deliberately NOT bumped — a migrated
+        page is a physical copy of existing content, not logical demand, so
+        dedup_ratio stays comparable with migration on or off."""
+        matched = self.radix.match(prefix_hashes)
+        j = len(matched)
+        imported = 0
+        for i in range(j, len(prefix_hashes)):
+            if not self._free:
+                break                      # backpressure: free blocks only
+            b = self._free.pop()
+            if not self.radix.insert(prefix_hashes[i], b,
+                                     prefix_hashes[i - 1] if i else None):
+                self._return_free(b)       # collision: chain truncates here
+                break
+            self.radix.release(b)          # resident as cached, MRU
+            self._migrated_in.add(b)
+            imported += 1
+        refused = max(0, len(prefix_hashes) - j - imported)
+        self.migrated_in_blocks += imported
+        self.migration_refused_blocks += refused
+        return imported, refused
+
+    def hot_chains(self, max_blocks: int) -> List[List[int]]:
+        """Root-to-leaf hash chains over the registered radix content,
+        hottest leaf first (live leaves, then cached leaves by descending
+        recency), truncated to a total budget of ``max_blocks`` distinct
+        blocks — the donor side of push-mode replica warming. Chains may
+        share prefixes; the budget counts each block once, and a chain that
+        overflows it is cut to a (still valid) prefix."""
+        idx = self.radix
+        leaves = [n for n in idx.nodes.values() if not n.children]
+
+        def hotness(n: _RadixNode):
+            s = idx._cached.get(n.block)
+            return (0, 0) if s is None else (1, -s)
+
+        leaves.sort(key=hotness)
+        chains: List[List[int]] = []
+        seen: set = set()
+        budget = max_blocks
+        for leaf in leaves:
+            if budget <= 0:
+                break
+            chain: List[int] = []
+            node: Optional[_RadixNode] = leaf
+            while node is not None:
+                chain.append(node.hash)
+                node = node.parent
+            chain.reverse()
+            # unseen hashes form a suffix (shared parts are prefixes)
+            new = sum(1 for h in chain if h not in seen)
+            if new == 0:
+                continue
+            if new > budget:
+                chain = chain[:len(chain) - (new - budget)]
+                new = sum(1 for h in chain if h not in seen)
+                if new == 0:
+                    continue
+            seen.update(chain)
+            budget -= new
+            chains.append(chain)
+        return chains
+
     def clear_cache(self) -> int:
         """Purge every cached (refcount-0) radix block back to the free list
         — client failure/teardown semantics, where device KV is lost."""
@@ -713,7 +911,7 @@ class PagedKVAllocator:
             b = self.radix.evict_one()
             if b is None:
                 break
-            self._free.append(b)
+            self._return_free(b)
             n += 1
         return n
 
@@ -733,6 +931,8 @@ class PagedKVAllocator:
         for t in self.tables.values():
             if t.on_device:
                 expect.update(t.blocks)
+        for pinned in self._exports.values():   # outbound-migration pins
+            expect.update(pinned)
         assert dict(expect) == self.refcount, "refcount drift"
         live = sorted(b for b in expect if b < self.num_blocks)
         cached = sorted(self.radix._cached)
@@ -744,6 +944,8 @@ class PagedKVAllocator:
         for b in self.radix.by_block:
             assert b < self.num_blocks and (b in expect or b in self.radix._cached), \
                 "radix entry points at a non-resident block"
+        assert self._migrated_in <= set(self.radix.by_block), \
+            "migrated-in set holds a non-resident block"
         for h, node in self.radix.nodes.items():
             for ch, cnode in node.children.items():
                 assert self.radix.nodes.get(ch) is cnode, \
@@ -779,6 +981,11 @@ class PagedKVAllocator:
             "overcommitted_blocks": self.overcommitted_blocks,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hit_blocks": self.prefix_hit_blocks,
+            "prefix_tokens_seen": self.prefix_tokens_seen,
+            "migrated_out_blocks": self.migrated_out_blocks,
+            "migrated_in_blocks": self.migrated_in_blocks,
+            "migration_refused_blocks": self.migration_refused_blocks,
+            "migration_hit_tokens": self.migration_hit_tokens,
             "cow_forks": self.cow_forks,
             "cow_copied_blocks": self.cow_copied_blocks,
             "radix_evictions": self.radix_evictions,

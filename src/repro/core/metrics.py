@@ -65,6 +65,12 @@ class MetricsCollector:
         # prefill->decode KV bytes that never shipped because the decode
         # client's radix cache already held the prefix pages
         self.kv_transfer_dedup_bytes: float = 0.0
+        # cross-client radix prefix migrations: completed transfers and the
+        # wire bytes they put on Network links (the per-allocator view —
+        # blocks imported/refused, hit tokens on migrated pages — folds in
+        # from allocator stats below)
+        self.kv_migrations: int = 0
+        self.kv_migrated_bytes: float = 0.0
         # ... and allocator counters aggregated over clients at run() end
         # (clients retired mid-run fold into _kv_retired so their history
         # survives removal; collect_kv recomputes, so it is idempotent)
@@ -73,9 +79,13 @@ class MetricsCollector:
                  "recompute_drops": 0, "peak_blocks": 0,
                  # shared-prefix radix cache (PR 2)
                  "prefix_hit_tokens": 0, "prefix_hit_blocks": 0,
+                 "prefix_tokens_seen": 0,
                  "cow_forks": 0, "cow_copied_blocks": 0,
                  "radix_evictions": 0, "shared_blocks": 0,
-                 "block_refs_total": 0, "blocks_allocated_total": 0}
+                 "block_refs_total": 0, "blocks_allocated_total": 0,
+                 # cross-client prefix migration (PR 4)
+                 "migrated_out_blocks": 0, "migrated_in_blocks": 0,
+                 "migration_refused_blocks": 0, "migration_hit_tokens": 0}
         self.kv: Dict[str, float] = dict(_zero)
         self._kv_retired: Dict[str, float] = dict(_zero)
 
@@ -168,6 +178,8 @@ class MetricsCollector:
         s["swap_events"] = self.swap_events
         s["swap_bytes"] = self.swap_bytes
         s["kv_transfer_dedup_bytes"] = self.kv_transfer_dedup_bytes
+        s["kv_migrations"] = self.kv_migrations
+        s["kv_migrated_bytes"] = self.kv_migrated_bytes
         for k, v in self.kv.items():
             s[f"kv_{k}"] = v
         # logical block references per physical block allocated (>= 1; 1 means

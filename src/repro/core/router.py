@@ -17,6 +17,14 @@ LOAD_METRICS = ("queue", "input_len", "output_len", "kv_size",
 
 class Router:
     name = "base"
+    coordinator = None           # back-reference, set by Coordinator.bind
+
+    def bind(self, coordinator) -> None:
+        """Coordinator back-reference hook. Routers that can trigger
+        coordinator actions — e.g. the prefix-affinity fetch policy starting
+        a cross-client KV migration — reach it through ``self.coordinator``;
+        plain load balancers just ignore it."""
+        self.coordinator = coordinator
 
     def route(self, req: Request, candidates: List[Client], now: float) -> Client:
         raise NotImplementedError
@@ -58,8 +66,12 @@ class HeavyLightRouter(Router):
         self.metric = metric
 
     def route(self, req, candidates, now):
-        n_heavy = max(1, int(len(candidates) * self.heavy_frac))
-        heavy, light = candidates[:n_heavy], candidates[n_heavy:] or candidates
+        # deterministic split: the candidate list follows client-dict order,
+        # which a fail/recover/add silently reshuffles — partition a
+        # name-sorted view so the heavy pool is stable across churn
+        cands = sorted(candidates, key=lambda c: c.name)
+        n_heavy = max(1, int(len(cands) * self.heavy_frac))
+        heavy, light = cands[:n_heavy], cands[n_heavy:] or cands
         work = req.input_tokens + req.output_tokens * req.branches
         pool = heavy if work >= self.threshold else light
         return min(pool, key=lambda c: c.load(self.metric, now))
@@ -70,21 +82,48 @@ class PrefixAffinityRouter(Router):
     holds the longest prefix of the request's prompt (its pages get mapped,
     not recomputed), tie-breaking — and falling back for identity-less
     requests — on a load metric. Hits below ``min_hit_tokens`` are ignored
-    so a stale one-block hit cannot override load balance."""
+    so a stale one-block hit cannot override load balance.
+
+    Fetch policy (``fetch_load_factor``): affinity alone concentrates hot
+    prefixes on one client until it saturates. When the warm client's load
+    exceeds ``fetch_load_factor ×`` the load-best candidate's (floored at
+    one load unit so an idle fleet is not "overloaded" by a single
+    request), the request routes to the load-best client instead — and the
+    coordinator is asked to *migrate* the prefix there, shipping the KV
+    pages over the Network when the wire fetch prices cheaper than
+    recomputing them (``Coordinator.maybe_fetch_prefix``). None disables
+    the policy (PR-2 pure-affinity behavior)."""
 
     name = "prefix_affinity"
 
-    def __init__(self, metric: str = "queue", min_hit_tokens: int = 64):
+    def __init__(self, metric: str = "queue", min_hit_tokens: int = 64,
+                 fetch_load_factor: Optional[float] = None):
         assert metric in LOAD_METRICS, metric
         self.metric = metric
         self.min_hit_tokens = min_hit_tokens
+        self.fetch_load_factor = fetch_load_factor
 
     def route(self, req, candidates, now):
         hits = {c.name: c.prefix_hit_tokens(req) for c in candidates}
         best = max(hits.values())
-        if best >= self.min_hit_tokens:
-            candidates = [c for c in candidates if hits[c.name] == best]
-        return min(candidates, key=lambda c: c.load(self.metric, now))
+        if best < self.min_hit_tokens:
+            return min(candidates, key=lambda c: c.load(self.metric, now))
+        warm = [c for c in candidates if hits[c.name] == best]
+        warm_best = min(warm, key=lambda c: c.load(self.metric, now))
+        if self.fetch_load_factor is None or self.coordinator is None:
+            return warm_best
+        load_best = min(candidates, key=lambda c: c.load(self.metric, now))
+        if load_best is warm_best:
+            return warm_best
+        w_load = warm_best.load(self.metric, now)
+        l_load = load_best.load(self.metric, now)
+        if w_load <= self.fetch_load_factor * max(l_load, 1.0):
+            return warm_best               # affinity wins below the knob
+        # warm client overloaded: place on the load-best client and warm it
+        # (the fetch-vs-recompute pricing inside decides whether the prefix
+        # actually ships or the new home just recomputes it)
+        self.coordinator.maybe_fetch_prefix(warm_best, load_best, req, now)
+        return load_best
 
 
 def make_router(policy: str = "round_robin", metric: str = "queue",

@@ -48,6 +48,14 @@ class SystemSpec:
     use_regression: bool = False
     straggler_deadline: Optional[float] = None
     embed_model: Optional[ModelConfig] = None
+    # cross-client radix prefix migration (PR 4)
+    prefix_migration: bool = False
+    migration_granularity: Optional[str] = None  # default: kv_transfer_gran.
+    warm_on_scale_out: bool = True
+    warm_max_blocks: int = 256
+    # prefix_affinity fetch policy: warm-client overload factor beyond which
+    # requests route load-best and the prefix migrates (None = affinity only)
+    fetch_load_factor: Optional[float] = None
 
 
 def _embed_model_small() -> ModelConfig:
@@ -147,9 +155,17 @@ def build_system(spec: SystemSpec) -> Coordinator:
             net.add_link(f"pcie:{c.name}", PCIE4_X4)
             net.connect(c.name, f"{c.name}:kvpool", [f"pcie:{c.name}"])
 
-    router = make_router(spec.router_policy, spec.router_metric)
+    router_kw = {}
+    if spec.router_policy == "prefix_affinity" \
+            and spec.fetch_load_factor is not None:
+        router_kw["fetch_load_factor"] = spec.fetch_load_factor
+    router = make_router(spec.router_policy, spec.router_metric, **router_kw)
     coord = Coordinator(clients, router, net, CoordinatorConfig(
         disaggregation=spec.disaggregation,
         kv_transfer_granularity=spec.kv_transfer_granularity,
-        straggler_deadline=spec.straggler_deadline))
+        straggler_deadline=spec.straggler_deadline,
+        prefix_migration=spec.prefix_migration,
+        migration_granularity=spec.migration_granularity,
+        warm_on_scale_out=spec.warm_on_scale_out,
+        warm_max_blocks=spec.warm_max_blocks))
     return coord

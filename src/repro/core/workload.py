@@ -91,12 +91,22 @@ class WorkloadConfig:
     prefix_reuse_rate: float = 1.0          # P(request draws from the pool)
     rag_chunk_pool: int = 0                 # distinct RAG chunks (0 = fiat
     rag_chunk_tokens: int = 500             #   rag_added_tokens, no identity)
+    # scale-out scenario knobs: a traffic surge at ``rate_ramp_at`` (the
+    # moment an operator would add a replica) — arrivals after it come
+    # ``rate_ramp``x faster. The surge is a deterministic time-compression
+    # of the same arrival sequence, so sweeps over ramp timing/intensity
+    # see the same request population.
+    rate_ramp_at: Optional[float] = None
+    rate_ramp: float = 1.0
 
 
 def generate(cfg: WorkloadConfig) -> List[rq.Request]:
     rng = np.random.default_rng(cfg.seed)
     ins, outs = cfg.trace.sample(rng, cfg.n_requests)
     times = arrival_times(rng, cfg.n_requests, cfg.rate, cfg.process)
+    if cfg.rate_ramp_at is not None and cfg.rate_ramp != 1.0:
+        t0 = cfg.rate_ramp_at
+        times = np.where(times > t0, t0 + (times - t0) / cfg.rate_ramp, times)
     out: List[rq.Request] = []
     for t, i, o in zip(times, ins, outs):
         if cfg.pipeline == "regular":

@@ -1,0 +1,439 @@
+"""Cross-client radix prefix migration (export/import over the Network) plus
+the PR's correctness-fix regressions: retrieval-latency convergence, stale
+straggler deadlines across stage transitions, failed-admission radix-LRU
+perturbation, and deterministic heavy-light partitioning."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Coordinator, CoordinatorConfig, SystemSpec,
+                        WorkloadConfig, build_system, generate)
+from repro.core.client import LLMClient
+from repro.core.llm_scheduler import SchedulerLimits
+from repro.core.memory import (PagedKVAllocator, expected_retrieval_latency,
+                               sample_retrieval_latency)
+from repro.core.metrics import simulator_stats
+from repro.core.request import LLM, PREPROCESS, Request, Stage
+from repro.core.router import HeavyLightRouter
+from repro.core.workload import TraceSpec
+from repro.core import events as ev
+from repro.perfmodel.hardware import (CacheTierSpec, ClusterSpec, H100,
+                                      PCIE4_X4)
+
+MODEL = get_config("llama3_70b")
+CLUSTER = ClusterSpec(H100, n_chips=2, tp=2)
+B = 4          # small block size for allocator-level tests
+
+
+def _chain(tag, n):
+    out, h = [], 0
+    for i in range(n):
+        h = hash((h, tag, i))
+        out.append(h)
+    return out
+
+
+def _kv(blocks=100.0):
+    return PagedKVAllocator(capacity_bytes=blocks * B, bytes_per_token=1.0,
+                            block_tokens=B)
+
+
+def _summaries_equal(a, b):
+    if set(a) != set(b):
+        return False, "key sets differ"
+    for k in a:
+        x, y = a[k], b[k]
+        if x == y:
+            continue
+        if isinstance(x, float) and isinstance(y, float) \
+                and math.isnan(x) and math.isnan(y):
+            continue
+        return False, (k, x, y)
+    return True, None
+
+
+# ---------------------------------------------------------------------------
+# allocator-level export / import
+# ---------------------------------------------------------------------------
+
+def test_migrate_then_hit_admission():
+    """Export a cached chain, import it elsewhere: the next same-prefix
+    admission at the destination maps the migrated pages and the hit is
+    attributed to the migration."""
+    src, dst = _kv(), _kv()
+    hs = _chain("a", 5)
+    assert src.allocate("r", 5 * B, prefix_hashes=hs)
+    src.free("r")                      # chain stays resident as cached
+    handle, n_res, nbytes = src.export_chain(hs)
+    assert n_res == 5 and nbytes == 5 * src.block_bytes
+    imported, refused = dst.import_chain(hs[:n_res])
+    assert (imported, refused) == (5, 0)
+    src.release_export(handle)
+    src.check_invariants()
+    dst.check_invariants()
+    assert dst.allocate("x", 5 * B, prefix_hashes=hs)
+    assert dst.prefix_hit_tokens == 5 * B
+    assert dst.migration_hit_tokens == 5 * B
+    # physical copies are not logical demand: dedup accounting untouched
+    assert dst.stats()["dedup_ratio"] >= 1.0
+    dst.check_invariants()
+
+
+def test_import_backpressure_never_evicts_resident_cache():
+    """Imports draw on the free list alone: a destination whose pool is
+    full of its own cached content refuses the migrated blocks instead of
+    evicting warm local cache (or stealing from live tables)."""
+    dst = _kv(blocks=4)
+    own = _chain("own", 4)
+    assert dst.allocate("d", 4 * B, prefix_hashes=own)
+    dst.free("d")
+    assert dst.cached_blocks == 4 and dst.free_blocks == 0
+    imported, refused = dst.import_chain(_chain("mig", 3))
+    assert (imported, refused) == (0, 3)
+    assert dst.cached_blocks == 4          # local cache untouched
+    assert dst.migration_refused_blocks == 3
+    dst.check_invariants()
+    # partial room: only the leading (most-shared) part of the chain lands
+    dst2 = _kv(blocks=4)
+    assert dst2.allocate("d", 2 * B)       # no prefix: 2 blocks live
+    imported, refused = dst2.import_chain(_chain("mig", 3))
+    assert (imported, refused) == (2, 1)
+    dst2.check_invariants()
+
+
+def test_import_collision_truncates_chain():
+    """A chain hash already registered under another block ends the import
+    there — same truncation rule as admission-time registration."""
+    dst = _kv()
+    hs = _chain("m", 4)
+    # hs[1] resurfaces at the destination under an unrelated root block
+    assert dst.allocate("other", 1 * B, prefix_hashes=[hs[1]])
+    imported, refused = dst.import_chain(hs)
+    assert imported == 1                   # hs[0] landed
+    assert refused == 3 - 1 + 1            # hs[1] collided, hs[2:] refused
+    assert dst.migration_refused_blocks == 3
+    dst.check_invariants()
+
+
+def test_export_pin_survives_reclaim_and_releases_evictable():
+    """Pinned source pages cannot be reclaimed while the chain is on the
+    wire; releasing the pin returns them to the evictable cache."""
+    src = _kv(blocks=6)
+    hs = _chain("p", 3)
+    assert src.allocate("r", 3 * B, prefix_hashes=hs)
+    src.free("r")
+    handle, _, _ = src.export_chain(hs)
+    assert src.clear_cache() == 0          # all cached blocks are pinned
+    assert src.cached_blocks == 0
+    src.check_invariants()
+    src.release_export(handle)
+    assert src.cached_blocks == 3
+    assert src.clear_cache() == 3          # evictable again after release
+    src.check_invariants()
+
+
+def test_export_skip_ships_only_the_suffix():
+    src = _kv()
+    hs = _chain("s", 6)
+    assert src.allocate("r", 6 * B, prefix_hashes=hs)
+    handle, n_res, nbytes = src.export_chain(hs, skip=4)
+    assert n_res == 6 and nbytes == 2 * src.block_bytes
+    src.release_export(handle)
+    assert src.export_chain(hs, skip=6) is None
+    src.free("r")
+    src.check_invariants()
+
+
+def test_hot_chains_budget_and_validity():
+    src = _kv()
+    for tag, n in (("a", 5), ("b", 3)):
+        assert src.allocate(tag, n * B, prefix_hashes=_chain(tag, n))
+    src.free("b")                          # b is cached, a is live (hotter)
+    chains = src.hot_chains(max_blocks=6)
+    assert sum(len(c) for c in chains) <= 6 + 2  # shared prefixes only
+    assert chains[0] == _chain("a", 5)     # live leaf first, full chain
+    assert chains[1] == _chain("b", 3)[:1]  # budget cut to a valid prefix
+    # every returned chain must be matchable (a resident prefix)
+    for c in chains:
+        assert len(src.radix.match(c)) == len(c)
+
+
+# ---------------------------------------------------------------------------
+# coordinator end-to-end migration
+# ---------------------------------------------------------------------------
+
+MIG_TRACE = TraceSpec("mig", input_mean=384, input_std=0.3, output_mean=160,
+                      output_std=0.2, input_max=600, output_max=320)
+
+
+def _scaled_out_system(fast_forward=True, migration=True, scale_at=4.0,
+                       n_requests=40):
+    limits = SchedulerLimits(max_batch=32, fast_forward=fast_forward)
+    spec = SystemSpec(n_llm_clients=1, strategy="continuous", limits=limits,
+                      with_pre_post=False, router_policy="prefix_affinity",
+                      prefix_migration=migration, fetch_load_factor=1.5)
+    coord = build_system(spec)
+    warm = coord.clients["llm0"]
+    cold = LLMClient("llm1", warm.cluster, warm.model_cfg, "continuous",
+                     limits, "fcfs", warm.scheduler.perf)
+    coord.network.add_link("pcie:llm1", PCIE4_X4)
+    coord.network.connect("llm1", "llm1:kvpool", ["pcie:llm1"])
+    coord.schedule_add_client(cold, at=scale_at)
+    wl = WorkloadConfig(trace=MIG_TRACE, rate=4.0, n_requests=n_requests,
+                        seed=3, shared_prefix_pool=4,
+                        shared_prefix_tokens=512, prefix_reuse_rate=1.0,
+                        postprocess=False, rate_ramp_at=scale_at,
+                        rate_ramp=2.0)
+    coord.submit(generate(wl))
+    return coord, coord.run()
+
+
+def test_scale_out_push_warming_recovers_cold_replica():
+    coord, m = _scaled_out_system()
+    s = m.summary()
+    assert s["kv_migrations"] > 0
+    assert s["kv_migrated_bytes"] > 0
+    assert s["kv_migrated_in_blocks"] > 0
+    # migration traffic rides the Network (rack fabric)
+    assert coord.network.stats()["rack"]["bytes"] >= s["kv_migrated_bytes"]
+    warm = coord.clients["llm0"].prefix_hit_rate()
+    cold = coord.clients["llm1"].prefix_hit_rate()
+    assert warm > 0 and cold >= 0.8 * warm
+    # migrated pages actually served admissions
+    assert s["kv_migration_hit_tokens"] > 0
+    for c in coord.clients.values():
+        kv = getattr(c.scheduler, "kv", None)
+        if kv is not None:
+            kv.check_invariants()
+            assert not kv._exports          # every pin released
+
+
+def test_migration_mid_window_truncates_fast_forward_bit_equally():
+    """MIGRATE_DONE lands as an external event: in-flight decode windows at
+    the destination truncate-and-replay, so summaries, token timestamps and
+    energy stay bit-identical with fast-forward on or off."""
+    c_on, m_on = _scaled_out_system(fast_forward=True)
+    c_off, m_off = _scaled_out_system(fast_forward=False)
+    assert simulator_stats(c_on)["macro_windows"] > 0
+    assert m_on.summary()["kv_migrations"] > 0
+    ok, diff = _summaries_equal(m_on.summary(), m_off.summary())
+    assert ok, f"summary diverged: {diff}"
+    for a, b in zip(sorted(m_on.serviced, key=lambda r: r.arrival),
+                    sorted(m_off.serviced, key=lambda r: r.arrival)):
+        assert a.token_times == b.token_times
+        assert a.completion_time == b.completion_time
+    assert c_on.total_energy == c_off.total_energy
+
+
+def test_fetch_policy_migrates_without_scale_out():
+    """The prefix-affinity fetch policy alone (no CLIENT_ADD warming) must
+    spread an overloaded warm client's prefix to the load-best client."""
+    limits = SchedulerLimits(max_batch=8)
+    spec = SystemSpec(n_llm_clients=2, strategy="continuous", limits=limits,
+                      with_pre_post=False, router_policy="prefix_affinity",
+                      prefix_migration=True, warm_on_scale_out=False,
+                      fetch_load_factor=1.2)
+    coord = build_system(spec)
+    wl = WorkloadConfig(trace=MIG_TRACE, rate=16.0, n_requests=40, seed=5,
+                        shared_prefix_pool=2, shared_prefix_tokens=512,
+                        prefix_reuse_rate=1.0, postprocess=False)
+    coord.submit(generate(wl))
+    m = coord.run()
+    s = m.summary()
+    assert s["kv_migrations"] > 0
+    assert s["kv_migration_hit_tokens"] > 0
+    assert coord.clients["llm1"].prefix_hit_rate() > 0
+
+
+def test_source_failure_discards_pins_instead_of_resurrecting_kv():
+    """A donor that fails mid-transfer loses its device KV — including the
+    pinned chain. The pins are discarded at drain (so the purge covers
+    them) and the late MIGRATE_DONE release is a harmless no-op; the bytes
+    already on the wire still land at the destination."""
+    coord = build_system(SystemSpec(n_llm_clients=2, strategy="continuous",
+                                    with_pre_post=False,
+                                    prefix_migration=True))
+    src = coord.clients["llm0"]
+    src_kv = src.scheduler.kv
+    hs = _chain("f", 3)
+    assert src_kv.allocate("r", 3 * src_kv.block_tokens, prefix_hashes=hs)
+    src_kv.free("r")
+    handle, n_res, nbytes = src_kv.export_chain(hs)
+    src.drain()                            # client failed mid-transfer
+    assert not src_kv._exports
+    assert src_kv.cached_blocks == 0       # pinned content died with it
+    src_kv.check_invariants()
+    coord._finish_migration(("llm0", "llm1", handle, tuple(hs[:n_res]),
+                             nbytes, ("llm1", tuple(hs))), now=1.0)
+    dst_kv = coord.clients["llm1"].scheduler.kv
+    assert dst_kv.migrated_in_blocks == 3  # wire data still lands
+    src_kv.check_invariants()
+    dst_kv.check_invariants()
+
+
+def test_migration_to_failed_destination_releases_source_pin():
+    spec = SystemSpec(n_llm_clients=2, strategy="continuous",
+                      with_pre_post=False, prefix_migration=True)
+    coord = build_system(spec)
+    src_kv = coord.clients["llm0"].scheduler.kv
+    hs = _chain("x", 3)
+    assert src_kv.allocate("r", 3 * src_kv.block_tokens, prefix_hashes=hs)
+    src_kv.free("r")
+    handle, n_res, nbytes = src_kv.export_chain(hs)
+    coord.clients["llm1"].failed = True
+    coord._finish_migration(("llm0", "llm1", handle, tuple(hs[:n_res]),
+                             nbytes, ("llm1", tuple(hs))), now=1.0)
+    assert not src_kv._exports             # pin released even on abort
+    assert coord.clients["llm1"].scheduler.kv.migrated_in_blocks == 0
+    src_kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# bugfix: Eq. 1 analytical/Monte-Carlo reconciliation
+# ---------------------------------------------------------------------------
+
+def test_retrieval_sample_mean_converges_to_expectation():
+    """The sampled walk pays every probed tier's lookup before missing; the
+    analytical recursion must charge the same — within 2% at 10k samples on
+    a miss-heavy chain (hit rates 0.3 / 0.5)."""
+    tiers = [CacheTierSpec("l1", 1e12, 1e-6, 1e9, 0.3),
+             CacheTierSpec("l2", 1e12, 1e-5, 1e8, 0.5)]
+    size, miss = 2e6, 0.25
+    rng = np.random.default_rng(7)
+    samples = [sample_retrieval_latency(size, tiers, miss, rng)
+               for _ in range(10_000)]
+    want = expected_retrieval_latency(size, tiers, miss)
+    assert abs(np.mean(samples) - want) / want < 0.02
+
+
+# ---------------------------------------------------------------------------
+# bugfix: stale straggler deadlines across stage transitions
+# ---------------------------------------------------------------------------
+
+def test_stale_straggler_deadline_does_not_fire_at_next_stage():
+    """A deadline armed at a previous stage's dispatch must not preempt the
+    request while it is legitimately queued at its *next* stage's client."""
+    coord = build_system(SystemSpec(n_llm_clients=2, with_pre_post=False,
+                                    straggler_deadline=1.0))
+    req = Request(arrival=0.0, input_tokens=64, output_tokens=8,
+                  stages=[Stage(LLM)])
+    req.current_stage.client = "llm0"
+    coord.clients["llm0"].scheduler.waiting.push(req)
+    coord._dispatch_times[req.rid] = 5.0   # re-armed at transfer arrival
+    coord._check_straggler(req, 0.0, now=1.0)   # stale prefill-era deadline
+    assert req.preemptions == 0
+    assert req in coord.clients["llm0"].scheduler.waiting
+    # the deadline armed at the forwarded dispatch still protects the stage
+    coord._check_straggler(req, 5.0, now=6.0)
+    assert req.preemptions == 1
+    assert req not in coord.clients["llm0"].scheduler.waiting
+    assert coord._dispatch_times[req.rid] == 6.0   # rescue re-armed
+
+
+def test_transfer_arrival_rearms_straggler_deadline():
+    """_transfer_and_forward must refresh _dispatch_times and arm a fresh
+    deadline for the forwarded stage (previously neither happened)."""
+    coord = build_system(SystemSpec(n_llm_clients=1,
+                                    straggler_deadline=2.0))
+    req = Request(arrival=0.0, input_tokens=64, output_tokens=8,
+                  stages=[Stage(PREPROCESS), Stage(LLM)])
+    req.advance_stage(1.0)                 # preprocess finished at t=1
+    coord._transfer_and_forward(req, "preproc0", 1.0)
+    arrive = coord._dispatch_times[req.rid]
+    assert arrive >= 1.0
+    checks = [e for e in coord.queue._heap if e.kind == ev.STRAGGLER_CHECK]
+    assert any(e.payload == (req, arrive) and e.time == arrive + 2.0
+               for e in checks)
+
+
+def test_dispatch_times_do_not_leak_after_completion():
+    coord = build_system(SystemSpec(
+        strategy="disaggregated", n_prefill=1, n_decode=2,
+        straggler_deadline=0.5))
+    coord.submit(generate(WorkloadConfig(n_requests=12, rate=4.0, seed=2,
+                                         disaggregated=True)))
+    coord.run()
+    assert coord.all_serviced()
+    assert coord._dispatch_times == {}     # previously an unbounded leak
+
+
+# ---------------------------------------------------------------------------
+# bugfix: failed admission must not perturb radix LRU order
+# ---------------------------------------------------------------------------
+
+def test_failed_admission_preserves_radix_lru_order():
+    """A stream of rejected admissions matching an old cached chain must not
+    keep it artificially hot: eviction order stays what it would have been
+    had they never arrived."""
+    kv = _kv(blocks=4)
+    ha, hc = _chain("A", 2), _chain("C", 2)
+    assert kv.allocate("a", 2 * B, prefix_hashes=ha)
+    kv.free("a")                           # A cached (older)
+    assert kv.allocate("c", 2 * B, prefix_hashes=hc)
+    kv.free("c")                           # C cached (newer)
+    a_blocks = kv.radix.match(ha)
+    # rejected admissions repeatedly match chain A (too big to admit)
+    for _ in range(3):
+        assert not kv.allocate("huge", 10 * B, prefix_hashes=ha)
+    kv.check_invariants()
+    # LRU leaf-first eviction must still take A's leaf (oldest), not C's
+    assert kv.radix.evict_one() == a_blocks[1]
+    assert kv.radix.evict_one() == a_blocks[0]
+    kv._free.extend(a_blocks[::-1])
+    kv.check_invariants()
+
+
+def test_failed_admission_rollback_keeps_counters_clean():
+    kv = _kv(blocks=4)
+    ha = _chain("A", 2)
+    assert kv.allocate("a", 2 * B, prefix_hashes=ha)
+    kv.free("a")
+    before = kv.stats()
+    assert not kv.allocate("huge", 10 * B, prefix_hashes=ha)
+    after = kv.stats()
+    assert after["admission_failures"] == before["admission_failures"] + 1
+    for k in ("block_refs_total", "shared_blocks", "prefix_hit_tokens",
+              "prefix_tokens_seen", "cached_blocks"):
+        assert after[k] == before[k], k
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# bugfix: deterministic heavy-light split + per-instance coordinator config
+# ---------------------------------------------------------------------------
+
+class _StubClient:
+    def __init__(self, name, load):
+        self.name = name
+        self._load = load
+
+    def load(self, metric, now):
+        return self._load
+
+
+def test_heavy_light_split_invariant_to_candidate_order():
+    router = HeavyLightRouter(threshold_tokens=100, heavy_frac=0.5,
+                              metric="queue")
+    clients = [_StubClient(f"c{i}", load=i) for i in range(4)]
+    heavy_req = Request(arrival=0.0, input_tokens=200, output_tokens=8,
+                        stages=[Stage(LLM)])
+    light_req = Request(arrival=0.0, input_tokens=10, output_tokens=8,
+                        stages=[Stage(LLM)])
+    import itertools
+    for perm in itertools.permutations(clients):
+        # heavy pool = name-sorted prefix {c0, c1}; c0 has the least load
+        assert router.route(heavy_req, list(perm), 0.0).name == "c0"
+        # light pool = {c2, c3}; c2 has the least load
+        assert router.route(light_req, list(perm), 0.0).name == "c2"
+
+
+def test_coordinator_config_default_is_not_shared():
+    c1 = Coordinator([])
+    c1.cfg.straggler_deadline = 123.0
+    c1.cfg.prefix_migration = True
+    c2 = Coordinator([])
+    assert c2.cfg.straggler_deadline is None
+    assert c2.cfg.prefix_migration is False
+    assert CoordinatorConfig().straggler_deadline is None

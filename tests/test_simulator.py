@@ -49,10 +49,12 @@ def _tier(hit, lat=1e-6, bw=1e9, cap=1e12):
 
 
 def test_eq1_closed_form_two_levels():
+    # every probed tier charges its lookup (hit or miss) — the walk the
+    # Monte-Carlo sampler takes, so the two agree on the miss path
     t1, t2 = _tier(0.6, 1e-6, 1e9), _tier(0.9, 1e-5, 1e8)
     size, miss = 1e6, 0.5
-    want = (0.6 * (1e-6 + size / 1e9)
-            + 0.4 * (0.9 * (1e-5 + size / 1e8) + 0.1 * miss))
+    want = (1e-6 + 0.6 * size / 1e9
+            + 0.4 * (1e-5 + 0.9 * size / 1e8 + 0.1 * miss))
     got = expected_retrieval_latency(size, [t1, t2], miss)
     assert math.isclose(got, want, rel_tol=1e-12)
 
