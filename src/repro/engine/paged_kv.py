@@ -1,0 +1,400 @@
+"""Physical paged-KV bookkeeping for the real-execution engine.
+
+``repro.core.memory.PagedKVAllocator`` models paged KV for the *simulator* —
+block tables over a virtual byte pool. This module is its real-execution
+twin: the same allocator semantics (fixed-size blocks, free list, refcounted
+prefix sharing, cached refcount-0 radix blocks with LRU leaf-first reclaim,
+swap/recompute preemption), but the blocks here index actual device arrays —
+the pooled ``(num_pages, block_tokens, kvh, hd)`` K/V tensors built by
+``models.transformer.init_paged_cache``. The store tracks *which* physical
+page holds *what*; the ``Engine`` in ``runner.py`` owns the JAX arrays and
+performs the actual scatter/gather/device-transfers the store's decisions
+imply.
+
+Mirrored semantics (kept deliberately parallel to ``core/memory.py`` so the
+fidelity benchmark compares like with like — see ``docs/architecture.md``):
+
+* **Admission** reserves ``ceil(tokens / block_tokens)`` whole blocks; blocks
+  whose block-aligned prompt-content hash chain is already resident are
+  *shared* (refcount bump, no new page) and the rest come off the free list.
+* **Growth** faults one block in at a time; exhaustion first reclaims cached
+  radix blocks (LRU, leaf-first), then reports failure so the engine can
+  preempt a victim.
+* **Release** decrefs; registered blocks whose refcount hits 0 stay resident
+  as evictable cache, everything else returns to the free list.
+* **Swap-out** only moves refcount-1 tables (a shared page cannot leave the
+  device without stranding its other owners — shared victims degrade to
+  recompute), cascade-unregisters the chain so cached descendants never
+  survive as orphans, and hands the engine the block list whose pages must
+  move device → host.
+* **Recompute drop** releases everything; the engine re-prefills on
+  re-admission (keeping the tokens generated so far — the resume prompt is
+  ``prompt + generated[:-1]``).
+
+Unlike the simulator allocator there is no overcommit: a physical pool
+cannot hold more pages than it has, so an allocation that cannot be met even
+after preemption is the caller's error (the engine sizes ``max_len`` against
+the pool at submit).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def prefix_chain(tokens: Sequence[int], block_tokens: int) -> List[int]:
+    """Block-aligned content-hash chain over a prompt: one hash per *full*
+    block, each chained over its parent so equal chains imply equal
+    block-aligned prefixes (the same scheme the simulator's workload layer
+    feeds ``PagedKVAllocator``). The partial tail block never registers."""
+    out: List[int] = []
+    h = 0
+    n_full = len(tokens) // block_tokens
+    for i in range(n_full):
+        blk = tuple(int(t) for t in
+                    tokens[i * block_tokens:(i + 1) * block_tokens])
+        h = hash((h, blk))
+        out.append(h)
+    return out
+
+
+class _Node:
+    __slots__ = ("hash", "block", "parent", "children")
+
+    def __init__(self, h: int, block: int, parent: Optional["_Node"]):
+        self.hash = h
+        self.block = block
+        self.parent = parent
+        self.children: Dict[int, "_Node"] = {}
+
+
+@dataclass
+class PagedTable:
+    """Per-request physical page map."""
+    rid: int
+    blocks: List[int] = field(default_factory=list)
+    tokens: int = 0                    # KV slots actually filled
+    hashes: List[int] = field(default_factory=list)  # registered chain prefix
+    on_device: bool = True
+    host_pages: Optional[Dict] = None  # leaf-path -> np.ndarray when swapped
+
+
+class PagedKVStore:
+    """Free list + refcounts + radix prefix index over a physical page pool.
+
+    ``num_blocks`` allocatable pages (the engine's pool additionally carries
+    one trash page at index ``num_blocks``, which this store never hands
+    out)."""
+
+    def __init__(self, num_blocks: int, block_tokens: int):
+        assert num_blocks >= 1 and block_tokens >= 1
+        self.num_blocks = int(num_blocks)
+        self.block_tokens = int(block_tokens)
+        self.trash_block = self.num_blocks      # engine's sentinel page id
+        self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self.tables: Dict[int, PagedTable] = {}
+        self.refcount: Dict[int, int] = {}
+        self.nodes: Dict[int, _Node] = {}       # chain hash -> node
+        self.by_block: Dict[int, int] = {}      # block -> chain hash
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # rc-0, LRU
+        # counters (mirrors of the simulator allocator's stats surface)
+        self.page_faults = 0
+        self.admission_failures = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.recompute_drops = 0
+        self.radix_evictions = 0
+        self.prefix_hit_blocks = 0
+        self.prefix_hit_tokens = 0
+        self.block_refs_total = 0
+        self.blocks_allocated_total = 0
+        self.peak_blocks = 0
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._cached)
+
+    @property
+    def available_blocks(self) -> int:
+        return len(self._free) + len(self._cached)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free) - len(self._cached)
+
+    def blocks_for_tokens(self, tokens: int) -> int:
+        return max(0, -(-int(tokens) // self.block_tokens))
+
+    # -- radix index ---------------------------------------------------------
+    def match(self, chain: Sequence[int]) -> List[int]:
+        out: List[int] = []
+        for h in chain:
+            node = self.nodes.get(h)
+            if node is None:
+                break
+            out.append(node.block)
+        return out
+
+    def _register(self, h: int, block: int, parent_hash: Optional[int]) -> bool:
+        if h in self.nodes:
+            return False                       # collision: chain ends here
+        parent = self.nodes.get(parent_hash) if parent_hash is not None else None
+        node = _Node(h, block, parent)
+        self.nodes[h] = node
+        self.by_block[block] = h
+        if parent is not None:
+            parent.children[h] = node
+        return True
+
+    def _unregister(self, block: int):
+        h = self.by_block.pop(block, None)
+        if h is None:
+            return
+        node = self.nodes.pop(h)
+        self._cached.pop(block, None)
+        if node.parent is not None:
+            node.parent.children.pop(h, None)
+
+    def _unregister_subtree(self, block: int) -> List[int]:
+        """Unregister a block's node and every registered descendant (swap-out
+        path). Returns cached descendant blocks that must return to the free
+        list — they lost their only reason to stay resident."""
+        h = self.by_block.get(block)
+        if h is None:
+            return []
+        freed: List[int] = []
+        stack = list(self.nodes[h].children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            del self.nodes[node.hash]
+            del self.by_block[node.block]
+            if node.block in self._cached:
+                del self._cached[node.block]
+                freed.append(node.block)
+        self._unregister(block)
+        return freed
+
+    def _evict_one(self) -> Optional[int]:
+        """Reclaim the LRU cached *leaf* (a parent may not go before its
+        registered children, so chains never get holes)."""
+        for block in self._cached:             # insertion order == LRU
+            if not self.nodes[self.by_block[block]].children:
+                self._unregister(block)
+                return block
+        return None
+
+    def _reclaim(self, n: int):
+        while len(self._free) < n:
+            b = self._evict_one()
+            if b is None:
+                break
+            self._free.append(b)
+            self.radix_evictions += 1
+
+    # -- refcounts -----------------------------------------------------------
+    def _incref(self, b: int):
+        rc = self.refcount.get(b, 0) + 1
+        self.refcount[b] = rc
+        self.block_refs_total += 1
+        if rc == 1:
+            self._cached.pop(b, None)          # cached -> live
+
+    def _decref(self, b: int):
+        rc = self.refcount[b] - 1
+        if rc > 0:
+            self.refcount[b] = rc
+            return
+        del self.refcount[b]
+        if b in self.by_block:
+            self._cached[b] = None             # live -> cached (MRU end)
+            self._cached.move_to_end(b)
+        else:
+            self._free.append(b)
+
+    def _take(self, n: int) -> List[int]:
+        self._reclaim(n)
+        assert len(self._free) >= n, "PagedKVStore._take past capacity"
+        got = [self._free.pop() for _ in range(n)]
+        for b in got:
+            self._incref(b)
+        self.blocks_allocated_total += len(got)
+        self.peak_blocks = max(self.peak_blocks, self.used_blocks)
+        return got
+
+    # -- admission / growth / release ----------------------------------------
+    def _room_for(self, need_total: int, matched: Sequence[int]) -> bool:
+        """Can ``need_total - len(matched)`` new blocks be taken once the
+        matched blocks are revived? Matched blocks that are currently cached
+        leave the evictable pool on revival, so they cannot also serve the
+        unmatched remainder."""
+        matched_cached = sum(1 for b in matched if b in self._cached)
+        return (need_total - len(matched)
+                <= self.available_blocks - matched_cached)
+
+    def can_admit(self, tokens: int, chain: Sequence[int] = ()) -> bool:
+        need_total = self.blocks_for_tokens(tokens)
+        matched = self.match(chain)[:need_total]
+        return self._room_for(need_total, matched)
+
+    def allocate(self, rid: int, tokens: int,
+                 chain: Sequence[int] = ()) -> Optional[Tuple[List[int], int]]:
+        """Whole-prompt admission. Returns ``(blocks, n_matched)`` — the
+        leading ``n_matched`` blocks are shared resident prefix pages the
+        engine need not rewrite — or None when the pool (free + evictable
+        cached) cannot cover the unmatched remainder."""
+        assert rid not in self.tables, f"double allocation for rid={rid}"
+        need_total = self.blocks_for_tokens(tokens)
+        matched = self.match(chain)[:need_total]
+        if not self._room_for(need_total, matched):
+            self.admission_failures += 1
+            return None
+        for b in matched:
+            self._incref(b)
+        blocks = matched + self._take(need_total - len(matched))
+        t = PagedTable(rid, blocks, int(tokens))
+        n_reg = min(len(chain), need_total)
+        for i in range(len(matched), n_reg):
+            if not self._register(chain[i], blocks[i],
+                                  chain[i - 1] if i else None):
+                n_reg = i
+                break
+        t.hashes = list(chain[:n_reg])
+        self.tables[rid] = t
+        if matched:
+            self.prefix_hit_blocks += len(matched)
+            self.prefix_hit_tokens += min(int(tokens),
+                                          len(matched) * self.block_tokens)
+        self.peak_blocks = max(self.peak_blocks, self.used_blocks)
+        return blocks, len(matched)
+
+    def needs_block(self, rid: int) -> bool:
+        """Would writing one more KV slot require faulting in a page?"""
+        t = self.tables[rid]
+        return t.tokens >= len(t.blocks) * self.block_tokens
+
+    def grow(self, rid: int) -> Optional[int]:
+        """Fault one block in for ``rid``. Returns the new physical block, or
+        None (counting a page fault) when nothing is free or evictable — the
+        engine then preempts a victim and retries."""
+        t = self.tables[rid]
+        assert t.on_device
+        if self.available_blocks < 1:
+            self.page_faults += 1
+            return None
+        (b,) = self._take(1)
+        t.blocks.append(b)
+        return b
+
+    def advance(self, rid: int, n: int = 1):
+        t = self.tables[rid]
+        t.tokens += n
+        assert t.tokens <= len(t.blocks) * self.block_tokens, \
+            f"rid={rid} wrote past its block table"
+
+    def free(self, rid: int):
+        """Release every reference (completion). Registered blocks stay
+        resident as evictable cache; the rest return to the free list."""
+        t = self.tables.pop(rid)
+        if not t.on_device:
+            t.host_pages = None
+            return
+        for b in reversed(t.blocks):           # leaf-before-parent LRU aging
+            self._decref(b)
+
+    # -- preemption ----------------------------------------------------------
+    def swap_out(self, rid: int) -> Optional[List[int]]:
+        """Begin swap-out: returns the block ids whose pages the engine must
+        gather to host, or None when the table holds shared (refcount > 1)
+        pages — those victims degrade to recompute, exactly like the
+        simulator's composition rule. The store releases the device blocks;
+        the engine stores the gathered pages on the table record."""
+        t = self.tables[rid]
+        assert t.on_device
+        if any(self.refcount.get(b, 1) > 1 for b in t.blocks):
+            return None
+        blocks = list(t.blocks)
+        for b in blocks:
+            for fb in self._unregister_subtree(b):
+                self._free.append(fb)
+                self.radix_evictions += 1
+            self._decref(b)
+        t.blocks = []
+        t.hashes = []
+        t.on_device = False
+        self.swap_outs += 1
+        return blocks
+
+    def swap_in(self, rid: int) -> Optional[List[int]]:
+        """Allocate fresh device blocks for a swapped table. Returns the new
+        block ids (the engine scatters ``host_pages`` into them) or None when
+        the pool cannot hold the table yet."""
+        t = self.tables[rid]
+        assert not t.on_device
+        n = self.blocks_for_tokens(t.tokens)
+        if n > self.available_blocks:
+            return None
+        t.blocks = self._take(n)
+        t.on_device = True
+        self.swap_ins += 1
+        return t.blocks
+
+    def drop(self, rid: int):
+        """Recompute preemption: discard the table entirely (pages are dead;
+        the engine re-prefills from tokens on re-admission)."""
+        self.free(rid)
+        self.recompute_drops += 1
+
+    # -- reporting -----------------------------------------------------------
+    def check_invariants(self):
+        from collections import Counter
+        expect: Counter = Counter()
+        for t in self.tables.values():
+            if t.on_device:
+                expect.update(t.blocks)
+        assert dict(expect) == self.refcount, "refcount drift"
+        live = sorted(expect)
+        cached = sorted(self._cached)
+        assert not set(live) & set(cached), "cached block is live"
+        assert sorted(self._free + live + cached) == list(range(self.num_blocks)), \
+            "block leak or double allocation"
+        for b in self.by_block:
+            assert b in expect or b in self._cached, \
+                "radix entry points at a non-resident block"
+        for h, node in self.nodes.items():
+            if node.parent is not None:
+                assert self.nodes.get(node.parent.hash) is node.parent, \
+                    "orphaned node"
+                assert node.parent.children.get(h) is node, \
+                    "parent lost child link"
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "num_blocks": self.num_blocks,
+            "block_tokens": self.block_tokens,
+            "used_blocks": self.used_blocks,
+            "free_blocks": self.free_blocks,
+            "cached_blocks": self.cached_blocks,
+            "peak_blocks": self.peak_blocks,
+            "utilization": self.used_blocks / max(1, self.num_blocks),
+            "page_faults": self.page_faults,
+            "admission_failures": self.admission_failures,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "recompute_drops": self.recompute_drops,
+            "radix_evictions": self.radix_evictions,
+            "prefix_hit_blocks": self.prefix_hit_blocks,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "block_refs_total": self.block_refs_total,
+            "blocks_allocated_total": self.blocks_allocated_total,
+            "dedup_ratio": (self.block_refs_total
+                            / max(1, self.blocks_allocated_total)),
+        }

@@ -1,12 +1,55 @@
-"""Real-execution serving engine: HERMES scheduling semantics (continuous
-batching, slot-based KV cache, admission control) driving ACTUAL JAX
-prefill/decode on a model — the e2e serving driver for examples/.
+"""Real-execution serving engine: continuous batching over a *paged* KV
+cache, driving ACTUAL JAX prefill/decode on a model.
 
-The simulator (repro.core) predicts this engine's behaviour; the fidelity
-benchmark replays the same request schedule through both and compares.
+Two engines live here:
+
+* ``Engine`` — the paged engine. KV lives in pooled page arrays
+  (``models.transformer.init_paged_cache``); admission, decode growth and
+  preemption all go through a ``PagedKVStore`` (``engine/paged_kv.py``) whose
+  semantics mirror the simulator's ``PagedKVAllocator``, so the simulator's
+  block fragmentation / prefix reuse / preemption behavior can be validated
+  against real execution (``benchmarks/engine_fidelity.py`` closes the loop).
+* ``SlotEngine`` — the original dense per-slot engine (one contiguous
+  ``(max_batch, max_len)`` cache row per slot), kept verbatim as the parity
+  oracle: under greedy decoding the paged engine must emit bit-identical
+  token streams (``tests/test_paged_engine.py``).
+
+Interface contract (paged ``Engine``)
+-------------------------------------
+* Geometry: ``max_len`` must be a multiple of ``block_tokens``;
+  ``max_blocks = max_len // block_tokens``; the physical pool holds
+  ``num_blocks`` allocatable pages plus one *trash page* (index
+  ``num_blocks``). ``num_blocks`` defaults to ``max_batch * max_blocks``
+  (no memory pressure); shrink it to exercise preemption for real.
+* Block-table layout: row ``i`` of the ``(max_batch, max_blocks)`` table
+  maps logical token position ``p`` to physical page
+  ``table[i, p // block_tokens]``, slot ``p % block_tokens``. Dead rows
+  (no active request) point every entry at the trash page with length 0 —
+  their decode output is garbage the engine ignores, exactly like the dense
+  engine's stale slots, and their masked writes land in the trash page so
+  they can never corrupt a live page.
+* Length-masking: the model sees ``lengths`` per row and masks
+  ``pos >= length`` to probability exactly 0, so stale page content (prior
+  occupants, trash) cannot leak into live rows.
+* Admission reserves ``ceil(context / block_tokens)`` pages; full
+  block-aligned *prompt* blocks register in the store's radix index, and a
+  later admission whose prompt shares the block-aligned prefix maps the same
+  physical pages (refcount bump — real dedup, visible in
+  ``Engine.kv_stats()``).
+* Preemption (``preemption="swap" | "recompute"``) is *real*:
+  swap moves the victim's pages device -> host (``jax.device_get`` of the
+  gathered pages; ``jax.device_put`` scatters them back on resume) and
+  recompute drops the pages and re-prefills ``prompt + generated[:-1]`` on
+  re-admission. Both keep every token generated so far. Victims requeue
+  FIFO-fairly (by original submit order), and a shared-page victim degrades
+  from swap to recompute — the same composition rule the simulator uses.
+
+Cross-link: ``docs/architecture.md`` ("Paged real-execution engine") maps
+this module against the simulator stack layer by layer.
 """
 from __future__ import annotations
 
+import bisect
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -16,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.engine.paged_kv import PagedKVStore, prefix_chain
 from repro.models import steps
 from repro.models import transformer as tf
 
@@ -31,6 +75,8 @@ class EngineRequest:
     finish_time: Optional[float] = None
     tokens: List[int] = field(default_factory=list)
     slot: Optional[int] = None
+    state: str = "new"        # new | running | swapped | preempted | done
+    preemptions: int = 0
 
     @property
     def ttft(self):
@@ -46,7 +92,332 @@ class EngineRequest:
 
 
 class Engine:
-    """Continuous-batching engine with fixed decode slots."""
+    """Continuous-batching engine over paged KV (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
+                 max_len: int = 512, seed: int = 0, block_tokens: int = 16,
+                 num_blocks: Optional[int] = None, preemption: str = "swap",
+                 trace_occupancy: bool = False):
+        assert max_len % block_tokens == 0, \
+            "max_len must be a multiple of block_tokens (bit-exact parity " \
+            "with the dense engine needs identical logical cache length)"
+        assert preemption in ("swap", "recompute")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.block_tokens = block_tokens
+        self.max_blocks = max_len // block_tokens
+        self.num_blocks = (max_batch * self.max_blocks if num_blocks is None
+                           else num_blocks)
+        self.preemption = preemption
+        if params is None:
+            params, _ = tf.init_model(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.store = PagedKVStore(self.num_blocks, block_tokens)
+        self.caches = tf.init_paged_cache(cfg, max_batch, self.num_blocks,
+                                          block_tokens, self.max_blocks)
+        trash = self.store.trash_block
+        self._tables_np = np.full((max_batch, self.max_blocks), trash,
+                                  np.int32)
+        self._lengths_np = np.zeros((max_batch,), np.int32)
+        self.active: List[Optional[EngineRequest]] = [None] * max_batch
+        self.waiting: List[EngineRequest] = []
+        self.finished: List[EngineRequest] = []
+        self.steps = 0
+        self._next_rid = 0
+        self._admit_seq = 0
+        self._admit_order: Dict[int, int] = {}   # rid -> admit seq
+        self.trace_occupancy = trace_occupancy
+        self.occupancy: List[Dict] = []          # per-step block occupancy
+
+        bt, mb = self.block_tokens, self.max_blocks
+
+        @jax.jit
+        def _prefill_one(params, tokens):
+            return steps.prefill_step(params, {"tokens": tokens}, cfg, max_len)
+
+        @jax.jit
+        def _decode(params, tokens, caches):
+            return steps.serve_step(params, tokens, caches, cfg)
+
+        @jax.jit
+        def _write_prefill(caches, dense, ids):
+            out = {}
+            for name, g in caches.items():
+                d, gg = dense[name], dict(g)
+                for ck, pk in (("k", "k_pool"), ("v", "v_pool")):
+                    leaf = d[ck]                        # (L, 1, S, kvh, hd)
+                    L = leaf.shape[0]
+                    blocks = leaf[:, 0].reshape(L, mb, bt, *leaf.shape[3:])
+                    gg[pk] = g[pk].at[:, ids].set(blocks.astype(g[pk].dtype))
+                out[name] = gg
+            return out
+
+        @jax.jit
+        def _gather_pages(caches, ids):
+            return {name: {"k": g["k_pool"][:, ids], "v": g["v_pool"][:, ids]}
+                    for name, g in caches.items()}
+
+        @jax.jit
+        def _scatter_pages(caches, pages, ids):
+            out = {}
+            for name, g in caches.items():
+                gg = dict(g)
+                gg["k_pool"] = g["k_pool"].at[:, ids].set(pages[name]["k"])
+                gg["v_pool"] = g["v_pool"].at[:, ids].set(pages[name]["v"])
+                out[name] = gg
+            return out
+
+        self._prefill_one = _prefill_one
+        self._decode = _decode
+        self._write_prefill = _write_prefill
+        self._gather_pages = _gather_pages
+        self._scatter_pages = _scatter_pages
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> EngineRequest:
+        prompt = np.asarray(prompt, np.int32)
+        need = self.store.blocks_for_tokens(len(prompt) + max_new_tokens)
+        if need > self.num_blocks:
+            raise ValueError(
+                f"request needs {need} blocks but the pool holds only "
+                f"{self.num_blocks}; raise num_blocks or shrink the request")
+        r = EngineRequest(rid=self._next_rid, prompt=prompt,
+                          max_new_tokens=max_new_tokens, eos_id=eos_id,
+                          submit_time=time.monotonic())
+        self._next_rid += 1
+        self.waiting.append(r)
+        return r
+
+    # -- block-table row maintenance -----------------------------------
+    def _pad_ids(self, blocks: List[int]) -> np.ndarray:
+        ids = np.full((self.max_blocks,), self.store.trash_block, np.int32)
+        ids[:len(blocks)] = blocks
+        return ids
+
+    def _set_row(self, slot: int, blocks: List[int], length: int):
+        self._tables_np[slot] = self._pad_ids(blocks)
+        self._lengths_np[slot] = length
+
+    def _clear_row(self, slot: int):
+        self._tables_np[slot] = self.store.trash_block
+        self._lengths_np[slot] = 0
+
+    def _push_rows(self):
+        """Sync the host-side table/length mirrors into every cache group
+        (identical across layers — the indirection is per-request)."""
+        tabs = jnp.asarray(self._tables_np)
+        lens = jnp.asarray(self._lengths_np)
+        for g in self.caches.values():
+            L = g["block_tables"].shape[0]
+            g["block_tables"] = jnp.broadcast_to(tabs[None], (L, *tabs.shape))
+            g["length"] = jnp.broadcast_to(lens[None], (L, *lens.shape))
+
+    # -- admission ------------------------------------------------------
+    def _admit_one(self, slot: int, r: EngineRequest) -> bool:
+        """Try to place ``r`` in ``slot``; False when KV capacity blocks it
+        (head-of-line: the caller stops admitting, keeping FIFO order)."""
+        if r.state == "swapped":
+            blocks = self.store.swap_in(r.rid)
+            if blocks is None:
+                return False
+            t = self.store.tables[r.rid]
+            ids = jnp.asarray(np.asarray(blocks, np.int32))
+            self.caches = self._scatter_pages(
+                self.caches,
+                jax.device_put(t.host_pages), ids)
+            t.host_pages = None
+            self._set_row(slot, blocks, t.tokens)
+        else:
+            # new request, or a recompute-preempted one resuming: re-prefill
+            # the prompt plus every token generated so far but the last —
+            # the cache then covers positions [0, p + t - 1) and decode
+            # continues by feeding tokens[-1]. Nothing generated is lost.
+            ctx = np.concatenate([r.prompt,
+                                  np.asarray(r.tokens[:-1], np.int32)]) \
+                if r.tokens else r.prompt
+            chain = prefix_chain(r.prompt, self.block_tokens)
+            got = self.store.allocate(r.rid, len(ctx), chain)
+            if got is None:
+                return False
+            blocks, _ = got
+            logits, dense = self._prefill_one(self.params, ctx[None, :])
+            ids = jnp.asarray(self._pad_ids(blocks))
+            # matched prefix blocks are rewritten with bit-identical content
+            # (same tokens at same positions => same K/V); only the table
+            # aliasing dedups memory, not the prefill compute
+            self.caches = self._write_prefill(self.caches, dense, ids)
+            if r.state == "new":
+                tok = int(jnp.argmax(logits, -1)[0])
+                r.first_token_time = time.monotonic()
+                r.tokens.append(tok)
+            self._set_row(slot, blocks, len(ctx))
+        r.slot = slot
+        r.state = "running"
+        self._admit_order[r.rid] = self._admit_seq
+        self._admit_seq += 1
+        self.active[slot] = r
+        return True
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.active[slot] is not None or not self.waiting:
+                continue
+            if not self._admit_one(slot, self.waiting[0]):
+                break
+            self.waiting.pop(0)
+
+    # -- preemption -----------------------------------------------------
+    def preempt_slot(self, slot: int, policy: Optional[str] = None):
+        """Evict the request in ``slot`` and requeue it FIFO-fairly (ordered
+        by original submit rid, not pushed to the queue head). ``swap``
+        moves its pages to host memory; ``recompute`` drops them. Either
+        way the tokens generated so far are kept."""
+        r = self.active[slot]
+        if r is None:
+            return
+        policy = policy or self.preemption
+        rid = r.rid
+        if policy == "swap":
+            blocks = self.store.swap_out(rid)
+            if blocks is None:                 # shared pages: degrade
+                policy = "recompute"
+            else:
+                # gather exactly the victim's pages (not the trash-padded
+                # table): host memory and the device->host transfer scale
+                # with the request, not with max_blocks
+                ids = jnp.asarray(np.asarray(blocks, np.int32))
+                pages = self._gather_pages(self.caches, ids)
+                self.store.tables[rid].host_pages = jax.device_get(pages)
+                r.state = "swapped"
+        if policy == "recompute":
+            self.store.drop(rid)
+            r.state = "preempted"
+        r.preemptions += 1
+        self.active[slot] = None
+        r.slot = None
+        self._clear_row(slot)
+        rids = [w.rid for w in self.waiting]
+        self.waiting.insert(bisect.bisect_left(rids, rid), r)
+
+    def _make_room(self, for_rid: int) -> bool:
+        """Free blocks by preempting the most-recently-admitted other active
+        request (the simulator's coldest-victim rule)."""
+        victims = [r for r in self.active
+                   if r is not None and r.rid != for_rid]
+        if not victims:
+            return False
+        v = max(victims, key=lambda r: self._admit_order[r.rid])
+        self.preempt_slot(v.slot)
+        return True
+
+    # -- decode ---------------------------------------------------------
+    def _grow_active(self):
+        """Fault in pages so every active row's table covers the KV slot its
+        next decode write lands in; exhaustion preempts victims."""
+        for slot in range(self.max_batch):
+            r = self.active[slot]      # re-read: _make_room may evict slots
+            if r is None or not self.store.needs_block(r.rid):
+                continue
+            while True:
+                b = self.store.grow(r.rid)
+                if b is not None:
+                    self._tables_np[r.slot,
+                                    len(self.store.tables[r.rid].blocks) - 1] = b
+                    break
+                if not self._make_room(r.rid):
+                    raise RuntimeError(
+                        "KV pool exhausted with no preemptable victim")
+
+    def _step_decode(self):
+        self._grow_active()
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None:
+                last[s, 0] = r.tokens[-1]
+        self._push_rows()
+        new_tok, _, self.caches = self._decode(self.params,
+                                               jnp.asarray(last), self.caches)
+        new_tok = np.asarray(new_tok)
+        # the model advanced every row, dead or live; dead rows clamp at
+        # max_len - 1 so the lengths+1 the kernel sees stay inside its
+        # documented max_blocks*block_tokens bound (live rows finish before
+        # max_len by the stop condition and never reach the clamp)
+        np.minimum(self._lengths_np + 1, self.max_len - 1,
+                   out=self._lengths_np)
+        now = time.monotonic()
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            self.store.advance(r.rid)
+            t = int(new_tok[s])
+            r.tokens.append(t)
+            done = (len(r.tokens) >= r.max_new_tokens
+                    or (r.eos_id is not None and t == r.eos_id)
+                    or len(r.prompt) + len(r.tokens) >= self.max_len - 1)
+            if done:
+                r.finish_time = now
+                r.state = "done"
+                self.store.free(r.rid)
+                del self._admit_order[r.rid]   # rids never reuse: don't leak
+                self.finished.append(r)
+                self.active[s] = None
+                self._clear_row(s)
+        self.steps += 1
+        if self.trace_occupancy:
+            st = self.store
+            self.occupancy.append({
+                "step": self.steps, "used_blocks": st.used_blocks,
+                "free_blocks": st.free_blocks,
+                "cached_blocks": st.cached_blocks,
+                "active": sum(a is not None for a in self.active),
+            })
+
+    def run(self, max_steps: int = 100_000) -> List[EngineRequest]:
+        while (self.waiting or any(a is not None for a in self.active)) \
+                and self.steps < max_steps:
+            self._admit()
+            if any(a is not None for a in self.active):
+                self._step_decode()
+        return self.finished
+
+    def kv_stats(self) -> Dict[str, float]:
+        return self.store.stats()
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Can this config serve through the paged ``Engine``? Paging covers
+    attention KV only: MLA's latent cache and hybrid/ssm recurrent state are
+    not paged yet (see ROADMAP open items)."""
+    return (cfg.family in ("dense", "vlm", "audio", "moe")
+            and cfg.attn_type != "mla")
+
+
+def make_engine(cfg: ModelConfig, **kw):
+    """Engine factory: the paged ``Engine`` when the config supports paged
+    attention caches, else the dense ``SlotEngine`` (which serves every
+    decode-capable family). Paged-only kwargs are dropped for the dense
+    fallback."""
+    if paged_supported(cfg):
+        return Engine(cfg, **kw)
+    for k in ("block_tokens", "num_blocks", "preemption", "trace_occupancy"):
+        kw.pop(k, None)
+    return SlotEngine(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# dense slot engine (the parity oracle)
+# ---------------------------------------------------------------------------
+
+class SlotEngine:
+    """The original dense-KV engine: one contiguous ``(max_len, kvh, hd)``
+    cache row per decode slot, no paging. Kept as the bit-exactness oracle
+    for the paged ``Engine`` (same admission policy, same greedy decode, so
+    token streams must match) and as the simplest reference driver. Its
+    preemption keeps the seed behavior — it *discards* progress past the
+    first streamed token — which is exactly the deficiency the paged engine
+    removes; don't use it for preemption studies."""
 
     def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
                  max_len: int = 512, seed: int = 0):
@@ -61,6 +432,7 @@ class Engine:
         self.waiting: List[EngineRequest] = []
         self.finished: List[EngineRequest] = []
         self.steps = 0
+        self._next_rid = 0
 
         @jax.jit
         def _prefill_one(params, tokens):
@@ -76,11 +448,11 @@ class Engine:
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> EngineRequest:
-        r = EngineRequest(rid=len(self.waiting) + len(self.finished)
-                          + sum(a is not None for a in self.active),
+        r = EngineRequest(rid=self._next_rid,
                           prompt=np.asarray(prompt, np.int32),
                           max_new_tokens=max_new_tokens, eos_id=eos_id,
                           submit_time=time.monotonic())
+        self._next_rid += 1
         self.waiting.append(r)
         return r
 

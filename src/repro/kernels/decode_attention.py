@@ -4,6 +4,36 @@ Decode is memory-bound: the kernel streams K/V tiles HBM->VMEM once, keeps the
 (tiny) query tile and the fp32 online-softmax state resident in VMEM, and
 masks by per-request cache length. Grid: (batch, kv_heads, kv_blocks) with the
 kv dimension minor so scratch carries across tiles.
+
+Interface contract
+------------------
+``decode_attention(q, k_cache, v_cache, lengths)``
+
+* ``q``       — ``(b, 1, nh, d)`` one new query token per request; GQA
+                grouping is ``g = nh // kvh`` (``nh % kvh == 0``).
+* ``k_cache`` — ``(b, S, kvh, d)`` contiguous per-request key cache, padded
+                to a common ``S``; only rows ``[0, lengths[i])`` are live.
+* ``v_cache`` — ``(b, S, kvh, dv)``; ``dv`` may differ from ``d`` (MLA-style
+                asymmetric heads).
+* ``lengths`` — ``(b,) int32`` valid cache tokens per request. The mask is
+                ``pos < lengths``: content at or past ``lengths[i]`` (stale
+                pages from a previous slot occupant, zero padding) gets
+                probability exactly 0 and can never leak into the output.
+                Rows must have ``1 <= lengths[i] <= S`` — a zero-length row
+                produces an unspecified garbage row (callers mask dead batch
+                slots, they don't zero them).
+
+Returns ``(b, 1, nh, dv)`` in ``q.dtype``. Scores/softmax accumulate in fp32
+regardless of cache dtype (``preferred_element_type``), matching the jnp
+oracle ``ref.decode_attention`` to fp32 tolerance.
+
+``block_s`` tiles the ``S`` dimension; tiles whose start is past ``lengths``
+skip compute entirely, so the cost of a short request in a long-padded batch
+is proportional to its own length, not to ``S``. The *paged* variant of this
+kernel — same online-softmax structure, but K/V gathered through a
+``(b, max_blocks)`` block table over a pooled ``(num_blocks, block_tokens,
+kvh, d)`` cache — lives in ``kernels/paged_attention.py``; see
+``docs/architecture.md`` for how the two relate to the simulator's allocator.
 """
 from __future__ import annotations
 

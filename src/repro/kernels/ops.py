@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
+from repro.kernels import paged_attention as _pa
 from repro.kernels import pq_scan as _pq
 
 
@@ -45,6 +46,20 @@ def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None
         return _da.decode_attention(q, k_cache, v_cache, lengths, scale=scale,
                                     interpret=(mode == "interpret"))
     return _ref.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           scale: float | None = None):
+    """Block-table-indexed decode attention over pooled KV pages (see
+    ``kernels.paged_attention`` for the layout contract)."""
+    mode = _mode()
+    if mode != "ref" and q.shape[-1] == v_pool.shape[-1] \
+            and q.shape[-1] % 128 == 0:
+        return _pa.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                          lengths, scale=scale,
+                                          interpret=(mode == "interpret"))
+    return _ref.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                       lengths, scale=scale)
 
 
 def pq_scan(codes, lut):

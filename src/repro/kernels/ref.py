@@ -96,6 +96,30 @@ def decode_attention(q, k_cache, v_cache, lengths, *, scale: float | None = None
     return out.reshape(b, 1, nh, v_cache.shape[-1]).astype(q.dtype)
 
 
+def gather_paged_kv(pool, block_tables):
+    """Reassemble dense per-request caches from a paged pool.
+
+    pool: (num_blocks, block_tokens, ...); block_tables: (b, max_blocks)
+    int32. Returns (b, max_blocks * block_tokens, ...) — logical token
+    position p of request i is pool[block_tables[i, p // bt], p % bt].
+    """
+    gathered = pool[block_tables]                  # (b, mb, bt, ...)
+    b, mb, bt = gathered.shape[:3]
+    return gathered.reshape(b, mb * bt, *pool.shape[2:])
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           scale: float | None = None):
+    """Paged decode-attention oracle: gather the pools into dense caches and
+    defer to ``decode_attention``. Masked (beyond-``lengths``) positions
+    contribute exactly zero probability, so the gather's garbage content in
+    dead table entries cannot perturb the result — paged output is
+    bit-identical to the dense oracle on the same logical cache."""
+    k = gather_paged_kv(k_pool, block_tables)
+    v = gather_paged_kv(v_pool, block_tables)
+    return decode_attention(q, k, v, lengths, scale=scale)
+
+
 def pq_scan(codes, lut):
     """IVF-PQ asymmetric-distance scan.
 

@@ -10,7 +10,7 @@ import time
 import numpy as np
 
 from repro.configs import get_reduced_config
-from repro.engine.runner import Engine
+from repro.engine.runner import make_engine
 
 
 def main(argv=None):
@@ -26,8 +26,8 @@ def main(argv=None):
     cfg = get_reduced_config(args.arch)
     if not cfg.supports_decode:
         raise SystemExit(f"{args.arch} is encoder-only; no serving path")
-    eng = Engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
-                 seed=args.seed)
+    eng = make_engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
+                      seed=args.seed)
     rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
     for i in range(args.requests):

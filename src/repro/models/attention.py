@@ -125,10 +125,14 @@ def gqa_decode(params, x, cfg: ModelConfig, cache: Dict) -> Tuple[jnp.ndarray, D
     """One-token decode against a static-length cache.
 
     x: (b, 1, d); cache k/v: (b, S, kvh, hd); cache["length"]: (b,) current
-    number of valid tokens (the new token is written at that index).
+    number of valid tokens (the new token is written at that index). A paged
+    cache (``k_pool`` present — see ``paged_cache_spec``) routes to
+    ``gqa_decode_paged`` instead.
     """
     from repro.kernels import ops
 
+    if "k_pool" in cache:
+        return gqa_decode_paged(params, x, cfg, cache)
     hd = cfg.resolved_head_dim
     lengths = cache["length"]
     q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
@@ -148,6 +152,54 @@ def gqa_decode(params, x, cfg: ModelConfig, cache: Dict) -> Tuple[jnp.ndarray, D
     out = ops.decode_attention(q, k_cache, v_cache, lengths + 1, scale=hd ** -0.5)
     out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
     return out, {"k": k_cache, "v": v_cache, "length": lengths + 1}
+
+
+def gqa_decode_paged(params, x, cfg: ModelConfig,
+                     cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode against a *paged* cache (block-table-indexed pool).
+
+    The per-layer cache (see ``paged_cache_spec``) holds shared physical
+    pools ``k_pool``/``v_pool`` of shape ``(num_pages, block_tokens, kvh,
+    hd)`` plus per-request indirection: ``block_tables`` ``(b, max_blocks)``
+    and ``length`` ``(b,)``. The new token's K/V is written at logical
+    position ``length`` — physical slot ``(block_tables[i, length // bt],
+    length % bt)`` — so the caller (the paged ``Engine``) must have grown the
+    table to cover that position *before* the step, and must guarantee the
+    written page is unshared (refcount 1). Dead batch rows follow the same
+    contract as the dense path: their table points at the engine's trash page
+    and their output row is garbage the caller ignores.
+    """
+    from repro.kernels import ops
+
+    hd = cfg.resolved_head_dim
+    lengths = cache["length"]
+    tables = cache["block_tables"]
+    k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+    bt, mb = k_pool.shape[1], tables.shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    pos = lengths[:, None]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    blk = jnp.take_along_axis(tables,
+                              jnp.minimum(lengths // bt, mb - 1)[:, None],
+                              axis=1)[:, 0]
+    slot = blk * bt + lengths % bt                 # (b,) flat pool row
+
+    def upd(pool, new):
+        flat = pool.reshape(-1, *pool.shape[2:])
+        flat = flat.at[slot].set(new[:, 0].astype(pool.dtype))
+        return flat.reshape(pool.shape)
+
+    k_pool = upd(k_pool, k)
+    v_pool = upd(v_pool, v)
+    out = ops.paged_decode_attention(q, k_pool, v_pool, tables, lengths + 1,
+                                     scale=hd ** -0.5)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, {"k_pool": k_pool, "v_pool": v_pool, "block_tables": tables,
+                 "length": lengths + 1}
 
 
 # ---------------------------------------------------------------------------
@@ -263,6 +315,27 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {
         "k": jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads, hd), dtype),
         "v": jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def paged_cache_spec(cfg: ModelConfig, num_pages: int, block_tokens: int,
+                     batch: int, max_blocks: int, dtype=jnp.bfloat16):
+    """Abstract *paged* KV-cache entry for ONE attention layer.
+
+    ``num_pages`` counts every physical page in the pool, including any
+    sentinel/trash page the engine reserves; block-table entries must index
+    into ``[0, num_pages)``. MLA's latent cache is not paged yet (the paged
+    engine serves GQA-family models only)."""
+    if cfg.attn_type == "mla":
+        raise NotImplementedError("paged KV cache supports gqa/mqa/mha only")
+    hd = cfg.resolved_head_dim
+    return {
+        "k_pool": jax.ShapeDtypeStruct(
+            (num_pages, block_tokens, cfg.num_kv_heads, hd), dtype),
+        "v_pool": jax.ShapeDtypeStruct(
+            (num_pages, block_tokens, cfg.num_kv_heads, hd), dtype),
+        "block_tables": jax.ShapeDtypeStruct((batch, max_blocks), jnp.int32),
         "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
 

@@ -75,7 +75,11 @@ def prefill_step(params, batch: Dict, cfg: ModelConfig, max_len: int,
 
 
 def serve_step(params, tokens, caches, cfg: ModelConfig, rules=None, mesh=None):
-    """One decode step: tokens (b, 1) -> (new_token (b,), logits, caches)."""
+    """One decode step: tokens (b, 1) -> (new_token (b,), logits, caches).
+
+    ``caches`` may be either the dense per-slot pytree (``tf.init_cache``)
+    or the paged pool pytree (``tf.init_paged_cache``); the attention layer
+    dispatches on the cache structure."""
     logits, caches, _ = tf.forward(params, cfg, tokens=tokens, mode="decode",
                                    caches=caches, rules=rules, mesh=mesh)
     new_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -456,3 +456,35 @@ def init_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
 def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     spec, _ = init_cache_spec(cfg, batch, max_len)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_tokens: int, max_blocks: int):
+    """Paged-cache pytree for the real-execution engine: same layer grouping
+    as ``init_cache`` (``attn`` / ``dense_attn`` stacks on a leading scan
+    axis) but each layer holds a pooled page array plus per-request block
+    tables instead of a contiguous ``(b, S)`` cache.
+
+    The pool gets ``num_blocks + 1`` physical pages: page ``num_blocks`` is
+    the engine's *trash page* — dead batch rows' tables point at it (every
+    block-table entry must be a valid pool index for the gather), and it is
+    where their masked decode writes land. Block tables start all-trash and
+    lengths at 0. Only attention-cache families page; recurrent state
+    (hybrid/ssm) has no pages to share."""
+    if cfg.family not in ("dense", "vlm", "audio", "moe"):
+        raise NotImplementedError(
+            f"paged KV cache is attention-only (family={cfg.family})")
+    trash = num_blocks
+
+    def stack(n):
+        base = attn.paged_cache_spec(cfg, num_blocks + 1, block_tokens,
+                                     batch, max_blocks)
+        one = {k: (jnp.full(s.shape, trash, jnp.int32)
+                   if k == "block_tables" else jnp.zeros(s.shape, s.dtype))
+               for k, s in base.items()}
+        return jax.tree.map(lambda t: jnp.stack([t] * n, 0), one)
+
+    if cfg.family == "moe":
+        kd = cfg.moe.first_k_dense
+        return {"dense_attn": stack(kd), "attn": stack(cfg.num_layers - kd)}
+    return {"attn": stack(cfg.num_layers)}

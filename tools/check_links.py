@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs CI job.
+
+Usage: ``python tools/check_links.py PATH [PATH ...]`` where each PATH is a
+markdown file or a directory (scanned recursively for ``*.md``). For every
+inline link ``[text](target)``:
+
+* external schemes (http/https/mailto) are skipped — CI must not depend on
+  the network;
+* relative file targets must exist (resolved against the containing file);
+* fragment targets (``#anchor``, ``file.md#anchor``) must match a heading
+  in the target file, using GitHub's slugification (lowercase, punctuation
+  stripped, spaces to hyphens).
+
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: drop markdown emphasis/code markers and
+    punctuation, lowercase, spaces to hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def headings(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(md_path: str) -> List[Tuple[str, str]]:
+    with open(md_path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    base = os.path.dirname(os.path.abspath(md_path))
+    broken = []
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        path_part, _, frag = target.partition("#")
+        if path_part:
+            resolved = os.path.normpath(os.path.join(base, path_part))
+            if not os.path.exists(resolved):
+                broken.append((target, "file not found"))
+                continue
+            frag_file = resolved
+        else:
+            frag_file = md_path
+        if frag:
+            if not frag_file.endswith(".md") or not os.path.isfile(frag_file):
+                continue                    # anchors into non-md: skip
+            if slugify(frag) not in headings(frag_file):
+                broken.append((target, f"anchor #{frag} not found"))
+    return broken
+
+
+def collect(paths: List[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".md"))
+        elif p.endswith(".md"):
+            out.append(p)
+        else:
+            print(f"warning: skipping non-markdown arg {p}", file=sys.stderr)
+    return out
+
+
+def main(argv: List[str]) -> int:
+    files = collect(argv or ["."])
+    n_links = 0
+    rc = 0
+    for f in files:
+        broken = check_file(f)
+        with open(f, encoding="utf-8") as fh:
+            n_links += len(LINK_RE.findall(CODE_FENCE_RE.sub("", fh.read())))
+        for target, why in broken:
+            print(f"BROKEN {f}: ({target}) — {why}", file=sys.stderr)
+            rc = 1
+    print(f"checked {len(files)} file(s), {n_links} link(s)"
+          + ("" if rc == 0 else " — FAILURES above"))
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
