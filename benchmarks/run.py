@@ -9,6 +9,7 @@ import time
 MODULES = [
     "fidelity",          # Figs. 5-6
     "engine_fidelity",   # paged Engine vs simulator replay (calibration loop)
+    "engine_chunked",    # chunked prefill: ITL stall + long-context scenarios
     "regression_fit",    # SIII-E1
     "batching_matrix",   # Figs. 10-12 + Table III
     "reasoning",         # Fig. 8

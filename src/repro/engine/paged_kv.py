@@ -78,6 +78,7 @@ class PagedTable:
     blocks: List[int] = field(default_factory=list)
     tokens: int = 0                    # KV slots actually filled
     hashes: List[int] = field(default_factory=list)  # registered chain prefix
+    chain: List[int] = field(default_factory=list)   # full prompt hash chain
     on_device: bool = True
     host_pages: Optional[Dict] = None  # leaf-path -> np.ndarray when swapped
 
@@ -245,23 +246,40 @@ class PagedKVStore:
         matched = self.match(chain)[:need_total]
         return self._room_for(need_total, matched)
 
-    def allocate(self, rid: int, tokens: int,
-                 chain: Sequence[int] = ()) -> Optional[Tuple[List[int], int]]:
-        """Whole-prompt admission. Returns ``(blocks, n_matched)`` — the
-        leading ``n_matched`` blocks are shared resident prefix pages the
-        engine need not rewrite — or None when the pool (free + evictable
-        cached) cannot cover the unmatched remainder."""
+    def allocate(self, rid: int, tokens: int, chain: Sequence[int] = (),
+                 *, filled: Optional[int] = None,
+                 context_tokens: Optional[int] = None
+                 ) -> Optional[Tuple[List[int], int]]:
+        """Admission. Returns ``(blocks, n_matched)`` — the leading
+        ``n_matched`` blocks are shared resident prefix pages the engine
+        need not rewrite — or None when the pool (free + evictable cached)
+        cannot cover the unmatched remainder.
+
+        Whole-prompt path (defaults): reserve ``blocks_for(tokens)`` and
+        declare all ``tokens`` filled (the engine writes them immediately).
+
+        Chunked path: ``tokens`` covers only the FIRST chunk, ``filled=0``
+        (nothing written yet — the mixed step fills and ``advance``s chunk
+        by chunk, faulting later blocks in via ``grow``), and
+        ``context_tokens`` is the full eventual context length. Matched
+        prefix blocks are still claimed up to ``blocks_for(context_tokens)``
+        — aliasing resident content is free, and it keeps prefix-hit
+        accounting identical to the whole-prompt path."""
         assert rid not in self.tables, f"double allocation for rid={rid}"
-        need_total = self.blocks_for_tokens(tokens)
-        matched = self.match(chain)[:need_total]
-        if not self._room_for(need_total, matched):
+        context_tokens = int(tokens if context_tokens is None else context_tokens)
+        need_chunk = self.blocks_for_tokens(tokens)
+        cap = self.blocks_for_tokens(context_tokens)
+        matched = self.match(chain)[:cap]
+        need_fresh = max(0, need_chunk - len(matched))
+        if not self._room_for(len(matched) + need_fresh, matched):
             self.admission_failures += 1
             return None
         for b in matched:
             self._incref(b)
-        blocks = matched + self._take(need_total - len(matched))
-        t = PagedTable(rid, blocks, int(tokens))
-        n_reg = min(len(chain), need_total)
+        blocks = matched + self._take(need_fresh)
+        t = PagedTable(rid, blocks, int(tokens if filled is None else filled))
+        t.chain = list(chain)
+        n_reg = min(len(chain), len(blocks))
         for i in range(len(matched), n_reg):
             if not self._register(chain[i], blocks[i],
                                   chain[i - 1] if i else None):
@@ -271,7 +289,7 @@ class PagedKVStore:
         self.tables[rid] = t
         if matched:
             self.prefix_hit_blocks += len(matched)
-            self.prefix_hit_tokens += min(int(tokens),
+            self.prefix_hit_tokens += min(context_tokens,
                                           len(matched) * self.block_tokens)
         self.peak_blocks = max(self.peak_blocks, self.used_blocks)
         return blocks, len(matched)
@@ -284,14 +302,38 @@ class PagedKVStore:
     def grow(self, rid: int) -> Optional[int]:
         """Fault one block in for ``rid``. Returns the new physical block, or
         None (counting a page fault) when nothing is free or evictable — the
-        engine then preempts a victim and retries."""
+        engine then preempts a victim and retries.
+
+        Chain-aware: if the next block's prompt-content hash is resident
+        (another request registered it since this one's admission — e.g.
+        concurrent chunked prefills of a shared prefix), the resident page is
+        aliased (refcount bump, no free block consumed). Fresh blocks whose
+        chain position is known register as they are faulted in, so a
+        chunked prefill publishes its prefix block by block exactly like a
+        whole prefill publishes at admission."""
         t = self.tables[rid]
         assert t.on_device
+        i = len(t.blocks)
+        if i < len(t.chain):
+            node = self.nodes.get(t.chain[i])
+            if node is not None and (i == 0 or self.by_block.get(
+                    t.blocks[i - 1]) == t.chain[i - 1]):
+                self._incref(node.block)
+                t.blocks.append(node.block)
+                if i == len(t.hashes):
+                    t.hashes.append(t.chain[i])
+                self.prefix_hit_blocks += 1
+                self.prefix_hit_tokens += self.block_tokens
+                self.peak_blocks = max(self.peak_blocks, self.used_blocks)
+                return node.block
         if self.available_blocks < 1:
             self.page_faults += 1
             return None
         (b,) = self._take(1)
         t.blocks.append(b)
+        if i == len(t.hashes) and i < len(t.chain):
+            if self._register(t.chain[i], b, t.chain[i - 1] if i else None):
+                t.hashes.append(t.chain[i])
         return b
 
     def advance(self, rid: int, n: int = 1):
@@ -319,10 +361,21 @@ class PagedKVStore:
         the engine stores the gathered pages on the table record."""
         t = self.tables[rid]
         assert t.on_device
-        if any(self.refcount.get(b, 1) > 1 for b in t.blocks):
+        keep = self.blocks_for_tokens(t.tokens)
+        kept, tail = t.blocks[:keep], t.blocks[keep:]
+        if any(self.refcount.get(b, 1) > 1 for b in kept):
             return None
-        blocks = list(t.blocks)
-        for b in blocks:
+        # Unfilled tail blocks (chunked prefill reserves ahead of the fill
+        # front) are simply released, not swapped — there is nothing of this
+        # request's in them. A registered tail block someone else still
+        # shares keeps its registration; a refcount-1 registered one parks
+        # as evictable cache; the rest return to the free list. This runs
+        # BEFORE the kept-block unregister walk so cascades see tail blocks
+        # in their settled (cached) state.
+        for b in reversed(tail):
+            self._decref(b)
+        t.hashes = t.hashes[:keep]
+        for b in kept:
             for fb in self._unregister_subtree(b):
                 self._free.append(fb)
                 self.radix_evictions += 1
@@ -331,7 +384,7 @@ class PagedKVStore:
         t.hashes = []
         t.on_device = False
         self.swap_outs += 1
-        return blocks
+        return kept
 
     def swap_in(self, rid: int) -> Optional[List[int]]:
         """Allocate fresh device blocks for a swapped table. Returns the new

@@ -65,6 +65,39 @@ from repro.models import transformer as tf
 
 
 @dataclass
+class EngineConfig:
+    """Scheduling policy for the paged ``Engine`` — the TTFT-vs-ITL knob.
+
+    ``chunk_size == 0`` keeps the legacy whole-prompt admission path (one
+    blocking prefill per admission). With ``chunk_size > 0`` every scheduler
+    iteration becomes a MIXED iteration: running decodes take their normal
+    ``(b, 1)`` step AND waiting/partial prefills advance by up to one
+    ``(b, chunk_size)`` chunked-prefill pass in the same iteration, so a
+    long prompt never stalls running decodes for its whole length.
+
+    * ``chunk_size`` — prompt tokens per request per iteration. Smaller
+      chunks bound the per-iteration prefill work (better ITL for running
+      decodes), larger chunks finish prompts in fewer passes (better TTFT).
+    * ``token_budget`` — total forward tokens an iteration may spend across
+      both passes; 0 defaults to ``max_batch + chunk_size`` (all decodes
+      plus one full chunk).
+    * ``decode_share`` — fraction of ``token_budget`` reserved for decode
+      rows while any are running; the leftover is the chunk budget. 0 keeps
+      the default reservation (exactly the running decodes); 1.0 starves
+      prefill completely until every running decode finishes (max-ITL
+      extreme of the knob).
+    * ``max_context`` — logical KV tokens a single request may span; 0
+      defaults to ``max_len``. Raising it (multiple of ``block_tokens``)
+      lets the chunked engine serve prompts far beyond ``max_len`` — the
+      per-pass working set stays ``chunk_size`` wide regardless.
+    """
+    chunk_size: int = 0
+    token_budget: int = 0
+    decode_share: float = 0.0
+    max_context: int = 0
+
+
+@dataclass
 class EngineRequest:
     rid: int
     prompt: np.ndarray                       # (p,) int32
@@ -74,9 +107,23 @@ class EngineRequest:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     tokens: List[int] = field(default_factory=list)
+    token_times: List[float] = field(default_factory=list)
     slot: Optional[int] = None
     state: str = "new"        # new | running | swapped | preempted | done
     preemptions: int = 0
+    # chunked-prefill continuation state: ``ctx`` is the full context this
+    # admission must write to KV (prompt, or prompt + generated[:-1] on a
+    # recompute resume) and ``prefilled`` counts how much of it is written.
+    # ``prefilled == len(ctx)`` marks the request decode-phase.
+    ctx: Optional[np.ndarray] = None
+    prefilled: int = 0
+
+    @property
+    def itl(self) -> List[float]:
+        """Inter-token latencies (seconds) between consecutive streamed
+        tokens — the per-request tail-latency surface the chunked scheduler
+        is tuned against."""
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
 
     @property
     def ttft(self):
@@ -97,16 +144,31 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
                  max_len: int = 512, seed: int = 0, block_tokens: int = 16,
                  num_blocks: Optional[int] = None, preemption: str = "swap",
-                 trace_occupancy: bool = False):
+                 trace_occupancy: bool = False,
+                 config: Optional[EngineConfig] = None):
         assert max_len % block_tokens == 0, \
             "max_len must be a multiple of block_tokens (bit-exact parity " \
             "with the dense engine needs identical logical cache length)"
         assert preemption in ("swap", "recompute")
+        self.config = config or EngineConfig()
+        self.chunk_size = self.config.chunk_size
+        assert self.chunk_size >= 0
+        max_context = self.config.max_context or max_len
+        assert self.chunk_size or max_context == max_len, \
+            "max_context > max_len needs chunked prefill (chunk_size > 0): " \
+            "the whole-prompt path prefills through a (1, max_len) cache"
+        assert max_context % block_tokens == 0 and max_context >= max_len, \
+            "max_context must be a multiple of block_tokens and >= max_len"
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
+        self.max_context = max_context
+        # generation stop bound AND eager-validation bound for submit():
+        # chunked rows may span max_context, whole-prefill rows cap at
+        # max_len exactly like the dense oracle
+        self._len_limit = max_context if self.chunk_size else max_len
         self.block_tokens = block_tokens
-        self.max_blocks = max_len // block_tokens
+        self.max_blocks = max_context // block_tokens
         self.num_blocks = (max_batch * self.max_blocks if num_blocks is None
                            else num_blocks)
         self.preemption = preemption
@@ -141,6 +203,10 @@ class Engine:
             return steps.serve_step(params, tokens, caches, cfg)
 
         @jax.jit
+        def _chunk(params, tokens, q_valid, caches):
+            return steps.chunk_step(params, tokens, q_valid, caches, cfg)
+
+        @jax.jit
         def _write_prefill(caches, dense, ids):
             out = {}
             for name, g in caches.items():
@@ -170,6 +236,7 @@ class Engine:
 
         self._prefill_one = _prefill_one
         self._decode = _decode
+        self._chunk = _chunk
         self._write_prefill = _write_prefill
         self._gather_pages = _gather_pages
         self._scatter_pages = _scatter_pages
@@ -178,7 +245,22 @@ class Engine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> EngineRequest:
         prompt = np.asarray(prompt, np.int32)
-        need = self.store.blocks_for_tokens(len(prompt) + max_new_tokens)
+        # eager validation: a prompt must leave room for at least one
+        # generated token under the stop bound (p + t >= limit - 1), else it
+        # would only fail deep inside prefill/table maintenance
+        limit = self._len_limit
+        if len(prompt) > limit - 2:
+            if self.chunk_size:
+                raise ValueError(
+                    f"prompt of {len(prompt)} tokens exceeds max_context - 2 "
+                    f"= {limit - 2}; raise EngineConfig.max_context")
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds max_len - 2 = "
+                f"{limit - 2}; enable chunked prefill "
+                f"(EngineConfig(chunk_size=..., max_context=...)) to serve "
+                f"prompts past max_len")
+        need = self.store.blocks_for_tokens(
+            min(len(prompt) + max_new_tokens, limit - 1))
         if need > self.num_blocks:
             raise ValueError(
                 f"request needs {need} blocks but the pool holds only "
@@ -204,17 +286,29 @@ class Engine:
         self._tables_np[slot] = self.store.trash_block
         self._lengths_np[slot] = 0
 
-    def _push_rows(self):
-        """Sync the host-side table/length mirrors into every cache group
-        (identical across layers — the indirection is per-request)."""
-        tabs = jnp.asarray(self._tables_np)
-        lens = jnp.asarray(self._lengths_np)
+    def _push_rows(self, tables: Optional[np.ndarray] = None,
+                   lengths: Optional[np.ndarray] = None):
+        """Sync block-table/length rows into every cache group (identical
+        across layers — the indirection is per-request). Defaults to the
+        host mirrors; mixed iterations push per-pass VIEWS instead (chunk
+        rows appear as trash/0 to the decode pass so its structural write
+        at position ``length`` can never land in a live page)."""
+        tabs = jnp.asarray(self._tables_np if tables is None else tables)
+        lens = jnp.asarray(self._lengths_np if lengths is None else lengths)
         for g in self.caches.values():
             L = g["block_tables"].shape[0]
             g["block_tables"] = jnp.broadcast_to(tabs[None], (L, *tabs.shape))
             g["length"] = jnp.broadcast_to(lens[None], (L, *lens.shape))
 
     # -- admission ------------------------------------------------------
+    def _resume_ctx(self, r: EngineRequest) -> np.ndarray:
+        """Context a (re-)admission must cover in KV: the prompt plus every
+        token generated so far but the last — the cache then spans positions
+        [0, p + t - 1) and decode continues by feeding tokens[-1]. Nothing
+        generated is lost."""
+        return np.concatenate([r.prompt, np.asarray(r.tokens[:-1], np.int32)]) \
+            if r.tokens else r.prompt
+
     def _admit_one(self, slot: int, r: EngineRequest) -> bool:
         """Try to place ``r`` in ``slot``; False when KV capacity blocks it
         (head-of-line: the caller stops admitting, keeping FIFO order)."""
@@ -229,14 +323,29 @@ class Engine:
                 jax.device_put(t.host_pages), ids)
             t.host_pages = None
             self._set_row(slot, blocks, t.tokens)
+            # mid-prefill swap victims resume chunking where the fill front
+            # stopped; mid-decode victims have prefilled == len(ctx)
+            r.ctx = self._resume_ctx(r)
+            r.prefilled = t.tokens
+        elif self.chunk_size:
+            # chunked admission: reserve KV for the FIRST chunk only (plus
+            # any resident matched prefix — free dedup); the mixed step
+            # prefills chunk by chunk, growing the table at the fill front.
+            # No forward pass happens here, so admission never stalls
+            # running decodes.
+            ctx = self._resume_ctx(r)
+            chain = prefix_chain(r.prompt, self.block_tokens)
+            got = self.store.allocate(r.rid, min(self.chunk_size, len(ctx)),
+                                      chain, filled=0,
+                                      context_tokens=len(ctx))
+            if got is None:
+                return False
+            blocks, _ = got
+            r.ctx = ctx
+            r.prefilled = 0
+            self._set_row(slot, blocks, 0)
         else:
-            # new request, or a recompute-preempted one resuming: re-prefill
-            # the prompt plus every token generated so far but the last —
-            # the cache then covers positions [0, p + t - 1) and decode
-            # continues by feeding tokens[-1]. Nothing generated is lost.
-            ctx = np.concatenate([r.prompt,
-                                  np.asarray(r.tokens[:-1], np.int32)]) \
-                if r.tokens else r.prompt
+            ctx = self._resume_ctx(r)
             chain = prefix_chain(r.prompt, self.block_tokens)
             got = self.store.allocate(r.rid, len(ctx), chain)
             if got is None:
@@ -252,7 +361,10 @@ class Engine:
                 tok = int(jnp.argmax(logits, -1)[0])
                 r.first_token_time = time.monotonic()
                 r.tokens.append(tok)
+                r.token_times.append(r.first_token_time)
             self._set_row(slot, blocks, len(ctx))
+            r.ctx = ctx
+            r.prefilled = len(ctx)
         r.slot = slot
         r.state = "running"
         self._admit_order[r.rid] = self._admit_seq
@@ -313,12 +425,18 @@ class Engine:
         return True
 
     # -- decode ---------------------------------------------------------
+    def _is_decoding(self, r: EngineRequest) -> bool:
+        """Decode-phase rows have their whole context in KV; chunk-phase
+        rows are still filling it (chunked mode only)."""
+        return r.prefilled >= len(r.ctx)
+
     def _grow_active(self):
-        """Fault in pages so every active row's table covers the KV slot its
-        next decode write lands in; exhaustion preempts victims."""
+        """Fault in pages so every active DECODE row's table covers the KV
+        slot its next decode write lands in; exhaustion preempts victims."""
         for slot in range(self.max_batch):
             r = self.active[slot]      # re-read: _make_room may evict slots
-            if r is None or not self.store.needs_block(r.rid):
+            if r is None or not self._is_decoding(r) \
+                    or not self.store.needs_block(r.rid):
                 continue
             while True:
                 b = self.store.grow(r.rid)
@@ -330,40 +448,31 @@ class Engine:
                     raise RuntimeError(
                         "KV pool exhausted with no preemptable victim")
 
-    def _step_decode(self):
-        self._grow_active()
-        last = np.zeros((self.max_batch, 1), np.int32)
-        for s, r in enumerate(self.active):
-            if r is not None:
-                last[s, 0] = r.tokens[-1]
-        self._push_rows()
-        new_tok, _, self.caches = self._decode(self.params,
-                                               jnp.asarray(last), self.caches)
-        new_tok = np.asarray(new_tok)
-        # the model advanced every row, dead or live; dead rows clamp at
-        # max_len - 1 so the lengths+1 the kernel sees stay inside its
-        # documented max_blocks*block_tokens bound (live rows finish before
-        # max_len by the stop condition and never reach the clamp)
-        np.minimum(self._lengths_np + 1, self.max_len - 1,
-                   out=self._lengths_np)
-        now = time.monotonic()
-        for s, r in enumerate(self.active):
-            if r is None:
+    def _grow_to(self, r: EngineRequest, target_tokens: int):
+        """Fault pages until ``r``'s table covers ``target_tokens`` KV slots
+        (chunk-phase growth at the fill front); exhaustion preempts victims
+        — never ``r`` itself."""
+        t = self.store.tables[r.rid]
+        while len(t.blocks) * self.block_tokens < target_tokens:
+            b = self.store.grow(r.rid)
+            if b is not None:
+                self._tables_np[r.slot, len(t.blocks) - 1] = b
                 continue
-            self.store.advance(r.rid)
-            t = int(new_tok[s])
-            r.tokens.append(t)
-            done = (len(r.tokens) >= r.max_new_tokens
-                    or (r.eos_id is not None and t == r.eos_id)
-                    or len(r.prompt) + len(r.tokens) >= self.max_len - 1)
-            if done:
-                r.finish_time = now
-                r.state = "done"
-                self.store.free(r.rid)
-                del self._admit_order[r.rid]   # rids never reuse: don't leak
-                self.finished.append(r)
-                self.active[s] = None
-                self._clear_row(s)
+            if not self._make_room(r.rid):
+                raise RuntimeError(
+                    "KV pool exhausted with no preemptable victim")
+
+    def _finish(self, r: EngineRequest, now: float):
+        r.finish_time = now
+        r.state = "done"
+        self.store.free(r.rid)
+        del self._admit_order[r.rid]       # rids never reuse: don't leak
+        self.finished.append(r)
+        self.active[r.slot] = None
+        self._clear_row(r.slot)
+        r.slot = None
+
+    def _trace_step(self):
         self.steps += 1
         if self.trace_occupancy:
             st = self.store
@@ -374,12 +483,133 @@ class Engine:
                 "active": sum(a is not None for a in self.active),
             })
 
+    def _decode_bookkeeping(self, new_tok: np.ndarray):
+        """Per-row accounting after a decode pass: stream the token, advance
+        the store, finish rows that hit a stop condition."""
+        now = time.monotonic()
+        for s, r in enumerate(self.active):
+            if r is None or not self._is_decoding(r):
+                continue
+            self.store.advance(r.rid)
+            self._lengths_np[s] = min(self._lengths_np[s] + 1,
+                                      self._len_limit - 1)
+            t = int(new_tok[s])
+            r.tokens.append(t)
+            r.token_times.append(now)
+            done = (len(r.tokens) >= r.max_new_tokens
+                    or (r.eos_id is not None and t == r.eos_id)
+                    or len(r.prompt) + len(r.tokens) >= self._len_limit - 1)
+            if done:
+                self._finish(r, now)
+
+    def _step_decode(self):
+        """Legacy whole-prefill iteration: one (b, 1) decode pass."""
+        self._grow_active()
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None:
+                last[s, 0] = r.tokens[-1]
+        self._push_rows()
+        new_tok, _, self.caches = self._decode(self.params,
+                                               jnp.asarray(last), self.caches)
+        self._decode_bookkeeping(np.asarray(new_tok))
+        self._trace_step()
+
+    # -- mixed iteration (chunked prefill + continuous batching) --------
+    def _chunk_budget(self, n_dec: int) -> int:
+        """Chunk tokens this iteration may spend, after the decode
+        reservation (the TTFT-vs-ITL split of the token budget)."""
+        budget = self.config.token_budget or (self.max_batch + self.chunk_size)
+        if n_dec == 0:
+            return max(budget, 1)
+        reserved = max(n_dec,
+                       int(np.ceil(self.config.decode_share * budget)))
+        return max(0, budget - reserved)
+
+    def _step_mixed(self):
+        """One mixed iteration: (a) a (b, 1) decode pass for decode-phase
+        rows — identical in shape and numerics to the legacy iteration, with
+        chunk-phase rows viewed as trash/0 so the pass's structural KV write
+        cannot touch their pages — then (b) a (b, chunk_size) chunked
+        prefill pass advancing each chunk-phase row's fill front by up to
+        ``chunk_size`` tokens within the iteration's token budget. A prompt
+        completing its last chunk streams its first token from that pass
+        (bit-identical to whole prefill's last-position logits)."""
+        self._grow_active()
+        dec = [r for r in self.active if r is not None and self._is_decoding(r)]
+        if dec:
+            tabs = self._tables_np.copy()
+            lens = self._lengths_np.copy()
+            for r in self.active:
+                if r is not None and not self._is_decoding(r):
+                    tabs[r.slot] = self.store.trash_block
+                    lens[r.slot] = 0
+            last = np.zeros((self.max_batch, 1), np.int32)
+            for r in dec:
+                last[r.slot, 0] = r.tokens[-1]
+            self._push_rows(tabs, lens)
+            new_tok, _, self.caches = self._decode(
+                self.params, jnp.asarray(last), self.caches)
+            self._decode_bookkeeping(np.asarray(new_tok))
+
+        # chunk scheduling: admit-order fairness, shared token budget.
+        # _grow_to may preempt victims (most-recently-admitted), including
+        # rows already scheduled this pass — takes are re-validated after.
+        chunkers = sorted(
+            (r for r in self.active
+             if r is not None and not self._is_decoding(r)),
+            key=lambda r: self._admit_order[r.rid])
+        budget = self._chunk_budget(sum(1 for r in self.active
+                                        if r is not None
+                                        and self._is_decoding(r)))
+        takes: Dict[int, int] = {}
+        for r in chunkers:
+            if r.slot is None or self.active[r.slot] is not r:
+                continue                       # evicted by a peer's growth
+            take = min(self.chunk_size, len(r.ctx) - r.prefilled, budget)
+            if take <= 0:
+                continue
+            self._grow_to(r, r.prefilled + take)
+            takes[r.rid] = take
+            budget -= take
+        alive = {r.rid for r in self.active if r is not None}
+        takes = {rid: tk for rid, tk in takes.items() if rid in alive}
+        if takes:
+            toks = np.zeros((self.max_batch, self.chunk_size), np.int32)
+            q_valid = np.zeros((self.max_batch,), np.int32)
+            rows = [r for r in self.active
+                    if r is not None and r.rid in takes]
+            for r in rows:
+                tk = takes[r.rid]
+                toks[r.slot, :tk] = r.ctx[r.prefilled:r.prefilled + tk]
+                q_valid[r.slot] = tk
+            self._push_rows()                  # real tables for every row
+            new_tok, _, self.caches = self._chunk(
+                self.params, jnp.asarray(toks), jnp.asarray(q_valid),
+                self.caches)
+            new_tok = np.asarray(new_tok)
+            now = time.monotonic()
+            for r in rows:
+                tk = takes[r.rid]
+                self.store.advance(r.rid, tk)
+                r.prefilled += tk
+                self._lengths_np[r.slot] = r.prefilled
+                if r.prefilled == len(r.ctx) and not r.tokens:
+                    # prompt complete: stream the first token (resumes keep
+                    # their stream and re-enter decode by feeding tokens[-1])
+                    tok = int(new_tok[r.slot])
+                    r.first_token_time = now
+                    r.tokens.append(tok)
+                    r.token_times.append(now)
+        self._trace_step()
+
     def run(self, max_steps: int = 100_000) -> List[EngineRequest]:
+        step = self._step_mixed if self.chunk_size else self._step_decode
         while (self.waiting or any(a is not None for a in self.active)) \
                 and self.steps < max_steps:
             self._admit()
             if any(a is not None for a in self.active):
-                self._step_decode()
+                step()
         return self.finished
 
     def kv_stats(self) -> Dict[str, float]:
@@ -401,7 +631,8 @@ def make_engine(cfg: ModelConfig, **kw):
     fallback."""
     if paged_supported(cfg):
         return Engine(cfg, **kw)
-    for k in ("block_tokens", "num_blocks", "preemption", "trace_occupancy"):
+    for k in ("block_tokens", "num_blocks", "preemption", "trace_occupancy",
+              "config"):
         kw.pop(k, None)
     return SlotEngine(cfg, **kw)
 
@@ -473,6 +704,7 @@ class SlotEngine:
             now = time.monotonic()
             r.first_token_time = now
             r.tokens.append(tok)
+            r.token_times.append(now)
             r.slot = slot
             self._write_slot(slot, cache1)
             self.active[slot] = r
@@ -491,6 +723,7 @@ class SlotEngine:
                 continue
             t = int(new_tok[s])
             r.tokens.append(t)
+            r.token_times.append(now)
             done = (len(r.tokens) >= r.max_new_tokens
                     or (r.eos_id is not None and t == r.eos_id)
                     or len(r.prompt) + len(r.tokens) >= self.max_len - 1)
@@ -514,5 +747,6 @@ class SlotEngine:
         if r is None:
             return
         r.tokens = r.tokens[:1]           # keep the streamed first token
+        r.token_times = r.token_times[:1]
         self.active[slot] = None
         self.waiting.insert(0, r)

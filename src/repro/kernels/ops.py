@@ -62,6 +62,22 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
                                        lengths, scale=scale)
 
 
+def paged_chunk_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                          scale: float | None = None):
+    """Chunked-prefill attention over pooled KV pages: query j of row r sits
+    at logical position ``lengths[r] + j`` and attends over every pooled
+    position ``<= lengths[r] + j`` (cached context + causal chunk self).
+
+    No Pallas lowering yet — the chunk pass is prefill-shaped (one big
+    matmul per layer, not memory-bound like decode), so the jnp reference
+    compiles to the same XLA fusions as whole prefill. Numerics match
+    ``flash_attention`` bitwise so chunked K/V + logits reproduce the
+    whole-prompt prefill exactly.
+    """
+    return _ref.paged_chunk_attention(q, k_pool, v_pool, block_tables,
+                                      lengths, scale=scale)
+
+
 def pq_scan(codes, lut):
     mode = _mode()
     if mode != "ref":

@@ -120,6 +120,45 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     return decode_attention(q, k, v, lengths, scale=scale)
 
 
+def paged_chunk_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                          scale: float | None = None):
+    """Chunked-prefill attention over paged KV (the continuation-state path).
+
+    q: (b, s, nh, dq) — row ``r`` holds a *chunk* of prompt positions whose
+    logical offsets are ``lengths[r] + j`` for in-chunk index ``j``; the
+    chunk's own K/V must already be written into the pools at those
+    positions (the caller scatters before attending). Query ``j`` attends
+    over pooled positions ``< lengths[r] + j + 1`` — all previously cached
+    context plus the causal part of the chunk itself.
+
+    Numerics deliberately mirror ``flash_attention`` (fp32 score/prob path),
+    NOT ``decode_attention``: a chunk position must produce bit-identical
+    K/V and logits to the same position inside a whole-prompt prefill, and
+    whole-prompt prefill runs through ``flash_attention``. Masked positions
+    contribute probability exactly 0 (exp(NEG_INF - m) underflows to 0.0),
+    so trash/garbage beyond a row's coverage cannot perturb the output —
+    the same exact-zero contract the paged decode oracle relies on.
+
+    Rows beyond their valid chunk (the caller's padding) and dead rows
+    produce garbage outputs the caller ignores.
+    """
+    k = gather_paged_kv(k_pool, block_tables)          # (b, S, kvh, dq)
+    v = gather_paged_kv(v_pool, block_tables)          # (b, S, kvh, dv)
+    b, s, nh, dq = q.shape
+    S, kvh = k.shape[1], k.shape[2]
+    g = nh // kvh
+    scale = dq ** -0.5 if scale is None else scale
+    qr = q.reshape(b, s, kvh, g, dq)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = lengths[:, None] + jnp.arange(s)[None, :]   # (b, s) logical pos
+    mask = jnp.arange(S)[None, None, :] <= qpos[:, :, None]     # (b, s, S)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, nh, v.shape[-1]).astype(q.dtype)
+
+
 def pq_scan(codes, lut):
     """IVF-PQ asymmetric-distance scan.
 

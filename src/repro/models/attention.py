@@ -202,6 +202,68 @@ def gqa_decode_paged(params, x, cfg: ModelConfig,
                  "length": lengths + 1}
 
 
+def gqa_prefill_paged(params, x, cfg: ModelConfig, cache: Dict,
+                      q_valid: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill a CHUNK of each request against a *paged* cache (the
+    continuation-state path of chunked prefill).
+
+    x: (b, s, d) — row ``r`` carries ``q_valid[r]`` valid chunk tokens
+    (left-aligned; the rest is padding). The chunk starts at logical
+    position ``cache["length"][r]``, i.e. everything before it is already
+    written in the pools and serves as attention context. Chunk K/V is
+    scattered into the pools first, then each query attends over cached
+    context + the causal part of its own chunk via
+    ``ops.paged_chunk_attention``.
+
+    Write-safety contract: positions ``j >= q_valid[r]`` (padding, decode
+    rows riding along with ``q_valid == 0``, dead rows) are routed to the
+    trash page — by convention the LAST pool page — so a mixed iteration
+    can never corrupt live pages. Valid positions may target prefix-shared
+    pages (refcount > 1): sharers rewrite matched blocks bitwise
+    identically (aliasing dedups memory, not compute), so concurrent
+    readers of those pages are unperturbed.
+
+    Numerics match whole-prompt ``gqa_prefill`` bitwise: same einsum/rope
+    recipe per position, and the chunk attention mirrors
+    ``flash_attention``'s fp32 path with exact-zero masked tails.
+    """
+    from repro.kernels import ops
+
+    hd = cfg.resolved_head_dim
+    lengths = cache["length"]
+    tables = cache["block_tables"]
+    k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+    bt, mb = k_pool.shape[1], tables.shape[1]
+    b, s, _ = x.shape
+    j = jnp.arange(s)[None, :]
+    pos = lengths[:, None] + j                       # (b, s) logical pos
+    valid_q = j < q_valid[:, None]                   # (b, s)
+
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    blk = jnp.take_along_axis(tables, jnp.clip(pos // bt, 0, mb - 1), axis=1)
+    trash = k_pool.shape[0] - 1
+    slot = jnp.where(valid_q, blk * bt + pos % bt, trash * bt + j % bt)
+
+    def upd(pool, new):
+        flat = pool.reshape(-1, *pool.shape[2:])
+        flat = flat.at[slot.reshape(-1)].set(
+            new.reshape(b * s, *new.shape[2:]).astype(pool.dtype))
+        return flat.reshape(pool.shape)
+
+    k_pool = upd(k_pool, k)
+    v_pool = upd(v_pool, v)
+    out = ops.paged_chunk_attention(q, k_pool, v_pool, tables, lengths,
+                                    scale=hd ** -0.5)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, {"k_pool": k_pool, "v_pool": v_pool, "block_tables": tables,
+                 "length": lengths + q_valid}
+
+
 # ---------------------------------------------------------------------------
 # MLA
 # ---------------------------------------------------------------------------

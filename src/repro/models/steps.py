@@ -86,6 +86,21 @@ def serve_step(params, tokens, caches, cfg: ModelConfig, rules=None, mesh=None):
     return new_token, logits, caches
 
 
+def chunk_step(params, tokens, q_valid, caches, cfg: ModelConfig,
+               rules=None, mesh=None):
+    """One chunked-prefill step: tokens (b, s) holds a left-aligned chunk per
+    row, q_valid (b,) its valid length (0 for rows not chunking this pass).
+    Returns (new_token (b,), logits (b, V), caches) where ``new_token`` is
+    the greedy continuation after each row's last valid chunk position —
+    meaningful only for rows whose chunk COMPLETES the prompt; the engine
+    ignores it otherwise. ``caches`` must be the paged pool pytree."""
+    logits, caches, _ = tf.forward(params, cfg, tokens=tokens, mode="chunk",
+                                   caches=caches, rules=rules, mesh=mesh,
+                                   q_valid=q_valid)
+    new_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return new_token, logits, caches
+
+
 def init_train_state(cfg: ModelConfig, key):
     params, _ = tf.init_model(cfg, key)
     return {"params": params, "opt": init_opt_state(params)}

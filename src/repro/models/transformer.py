@@ -150,10 +150,11 @@ def abstract_model(cfg: ModelConfig, key=None):
 # ---------------------------------------------------------------------------
 
 def _block_fwd(p, x, positions, cfg: ModelConfig, mode: str, cache, rules,
-               moe_layer: bool, mesh=None):
+               moe_layer: bool, mesh=None, q_valid=None):
     """Standard (attention + mlp/moe) block. Returns (x, new_cache, aux)."""
     h = apply_norm(p["ln1"], x, cfg)
-    if (cfg.attn_in_seqshard and rules is not None and mode != "decode"
+    if (cfg.attn_in_seqshard and rules is not None
+            and mode not in ("decode", "chunk")
             and cfg.num_heads % rules.axis_sizes.get("model", 1) != 0):
         # enter sequence-parallel attention at d_model width (cheap) instead
         # of resharding the nh*hd-wide Q tensor inside attention
@@ -164,6 +165,11 @@ def _block_fwd(p, x, positions, cfg: ModelConfig, mode: str, cache, rules,
             a, new_cache = attn.mla_decode(p["attn"], h, cfg, cache)
         else:
             a, new_cache = attn.gqa_decode(p["attn"], h, cfg, cache)
+    elif mode == "chunk":
+        if cfg.attn_type == "mla":
+            raise NotImplementedError("chunked prefill supports gqa-family "
+                                      "attention only (paged KV)")
+        a, new_cache = attn.gqa_prefill_paged(p["attn"], h, cfg, cache, q_valid)
     else:
         if cfg.attn_type == "mla":
             a, new_cache = attn.mla_prefill(p["attn"], h, positions, cfg,
@@ -212,7 +218,7 @@ def _maybe_scan(body, init, xs, scan: bool):
 
 
 def _scan_blocks(params_stack, x, positions, cfg, mode, caches, rules,
-                 moe_layer, mesh):
+                 moe_layer, mesh, q_valid=None):
     """lax.scan over stacked blocks; caches (optional) are stacked on the
     same leading axis."""
     has_cache = caches is not None
@@ -224,7 +230,7 @@ def _scan_blocks(params_stack, x, positions, cfg, mode, caches, rules,
         else:
             p, cache = xs, None
         x, new_cache, a = _block_fwd(p, x, positions, cfg, mode, cache, rules,
-                                     moe_layer, mesh)
+                                     moe_layer, mesh, q_valid=q_valid)
         if not has_cache:
             new_cache = jnp.zeros((), jnp.int32)
         return (x, aux + a), new_cache
@@ -246,8 +252,17 @@ def _no_cache(n: int):
 
 def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             mode: str = "train", caches=None, rules: Optional[ShardingRules] = None,
-            mesh=None):
-    """Returns (logits, new_caches, aux_loss)."""
+            mesh=None, q_valid=None):
+    """Returns (logits, new_caches, aux_loss).
+
+    mode="chunk" is the chunked-prefill pass: ``tokens`` (b, s) holds one
+    left-aligned chunk per row, ``q_valid`` (b,) its per-row valid token
+    count, and ``caches`` must be paged — each chunk continues from the
+    request's cached context at position ``cache["length"]``. Logits are
+    taken at each row's LAST VALID chunk position (the whole-prefill
+    analogue of "last position"); rows with ``q_valid == 0`` produce
+    garbage logits the caller ignores.
+    """
     compute = jnp.dtype(cfg.compute_dtype)
     if embeds is not None:
         x = embeds.astype(compute) @ params["frontend_proj"].astype(compute)
@@ -256,7 +271,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
         x = params["embed"].astype(compute)[tokens]
         x = x * jnp.asarray(cfg.d_model ** 0.5, compute)
         b, s = tokens.shape
-    if mode == "decode":
+    if mode in ("decode", "chunk"):
         positions = None  # per-request positions come from cache lengths
     else:
         positions = jnp.arange(s, dtype=jnp.int32)[None, :]
@@ -269,7 +284,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     if cfg.family in ("dense", "vlm", "audio"):
         c = caches["attn"] if caches is not None else None
         x, nc, aux = _scan_blocks(params["layers"], x, positions, cfg, mode,
-                                  c, rules, False, mesh)
+                                  c, rules, False, mesh, q_valid=q_valid)
         new_caches = None if caches is None else {"attn": nc}
         aux_total += aux
 
@@ -277,9 +292,10 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
         cd = caches["dense_attn"] if caches is not None else None
         cm = caches["attn"] if caches is not None else None
         x, ncd, aux1 = _scan_blocks(params["dense_layers"], x, positions, cfg,
-                                    mode, cd, rules, False, mesh)
+                                    mode, cd, rules, False, mesh,
+                                    q_valid=q_valid)
         x, ncm, aux2 = _scan_blocks(params["layers"], x, positions, cfg, mode,
-                                    cm, rules, True, mesh)
+                                    cm, rules, True, mesh, q_valid=q_valid)
         aux_total += aux1 + aux2
         new_caches = (None if caches is None else {"dense_attn": ncd, "attn": ncm})
 
@@ -398,9 +414,14 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     head = (params["embed"].T if cfg.tie_embeddings else params["head"])
     if mode in ("prefill",):
         x = x[:, -1:, :]
+    elif mode == "chunk":
+        # per-row last VALID chunk position (q_valid == 0 rows read position
+        # 0 and produce garbage the caller ignores)
+        idx = jnp.maximum(q_valid - 1, 0).astype(jnp.int32)[:, None, None]
+        x = jnp.take_along_axis(x, idx, axis=1)
     logits = (x @ head.astype(x.dtype)).astype(jnp.dtype(cfg.logits_dtype))
     logits = softcap(logits, cfg.logits_softcap)
-    if mode in ("prefill", "decode"):
+    if mode in ("prefill", "decode", "chunk"):
         logits = logits[:, -1, :]
     return logits, new_caches, aux_total
 
