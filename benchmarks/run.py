@@ -21,7 +21,7 @@ MODULES = [
     "scaling_clients",   # Fig. 13
     "disaggregation",    # SII-B global/local + SIII-B2 transfer granularity
     "chunk_sweep",       # Fig. 6 chunk axis / Sarathi trade-off
-    "spec_decode",       # SIII-E1 optional optimization modeling
+    "spec_decode",       # SIII-E1 spec decode: engine + analytical + sim
     "kernel_bench",      # kernel rooflines
     "sim_throughput",    # simulator cost: decode fast-forward on vs off
 ]

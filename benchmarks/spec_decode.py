@@ -1,37 +1,319 @@
-"""Speculative decoding trade-off (paper §III-E1 optimization list): TPOT of
-plain decode vs draft-and-verify for varying acceptance rates and draft
-lengths, Llama-3-70B target + 2B-class draft on 2xH100 TP2."""
+"""Speculative decoding end-to-end: measured draft-and-verify in the real
+paged Engine, calibrated back into the analytical model and the simulator.
+
+Three arms close the loop (paper §III-E1's optimization list):
+
+* **engine** (measured, reduced model on CPU): the paged ``Engine`` with
+  ``EngineConfig(draft_cfg=..., spec_k=...)`` against the plain decode
+  engine on an identical schedule. Three draft qualities bracket the
+  mechanism — ``cold`` (an independent guard-2b-class draft: acceptance
+  ~0, the floor), ``noisy`` (the target's own weights perturbed by small
+  Gaussian noise: partial agreement, the realistic middle), ``perfect``
+  (the target as its own draft: acceptance 1, the ceiling). Every arm must
+  stream BIT-IDENTICAL tokens to plain decode; per arm we record wall
+  time, target passes, committed tokens per verify step, and the measured
+  per-position acceptance distribution (``Engine.spec_stats()``).
+* **analytical** (predicted): ``perfmodel.speculative_decode_step`` sweeps
+  k x alpha for the full-size pair (Llama-3-70B target + guard-2b draft on
+  2xH100 TP2), AND re-prices each engine arm with its MEASURED acceptance
+  distribution — ``expected_accepted_tokens(k, measured)`` is the
+  predicted tokens/step the gate compares against the engine's measured
+  value.
+* **simulator** (replayed): the discrete-event scheduler with
+  ``SchedulerLimits(spec_k=..., spec_acceptance=<measured distribution>)``
+  vs the plain scheduler on the same workload — the SPEC_DECODE stage
+  must improve decode-bound TPOT when fed the perfect arm's measured
+  acceptance.
+
+Emits ``BENCH_spec_decode.json``. With ``--check`` it exits non-zero when
+any spec arm's streams diverge from plain decode, the perfect arm fails to
+commit >1 token per verify step (the reason the feature exists), any arm's
+predicted-vs-measured tokens/step error exceeds ``CAL_TOL``, or the
+simulator's spec TPOT fails to beat its plain TPOT.
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
-from typing import List
+from typing import Dict, List
+
+if __package__ in (None, ""):                      # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import numpy as np
 
 from benchmarks.common import row
-from repro.configs import get_config
-from repro.core.system import _guard_model_2b
-from repro.perfmodel import analytical as ana
-from repro.perfmodel.hardware import ClusterSpec, H100
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_spec_decode.json")
+
+BLOCK_TOKENS = 16
+MAX_BATCH = 3
+MAX_LEN = 96
+PROMPT_LENS = (9, 14, 9, 20)      # few distinct lengths: few prefill jits
+MAX_NEW = 24                      # decode-bound: decode dominates prefill
+NOISE_SCALE = 0.1                 # 'noisy' draft: target weights + N(0, s^2)
+                                  # (picked for partial acceptance ~0.2 on
+                                  # the reduced model; 0.06 still accepts
+                                  # everything, 0.15 accepts nothing)
+SMOKE_KS = (4,)
+FULL_KS = (2, 4)
+CAL_TOL = 0.35                    # |predicted - measured| / predicted gate
 
 
-def run() -> List[str]:
-    out = []
+# ---------------------------------------------------------------------------
+# engine arm (measured)
+# ---------------------------------------------------------------------------
+
+def _prompts(vocab: int, seed: int = 5):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, n).astype(np.int32) for n in PROMPT_LENS]
+
+
+def _run_engine(cfg, params, prompts, *, spec_k=0, draft_cfg=None,
+                draft_params=None):
+    from repro.engine.runner import Engine, EngineConfig
+
+    conf = EngineConfig(draft_cfg=draft_cfg, spec_k=spec_k)
+    eng = Engine(cfg, params=params, max_batch=MAX_BATCH, max_len=MAX_LEN,
+                 block_tokens=BLOCK_TOKENS, config=conf,
+                 draft_params=draft_params)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=MAX_NEW)
+    t0 = time.perf_counter()
+    fin = eng.run()
+    wall = time.perf_counter() - t0
+    eng.store.check_invariants()
+    return eng, {r.rid: list(r.tokens) for r in fin}, wall
+
+
+def _noisy_params(params, scale: float):
+    import jax
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(23), len(leaves))
+    noisy = [l + scale * jax.random.normal(k, l.shape, l.dtype)
+             if jnp.issubdtype(l.dtype, jnp.floating) else l
+             for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def _engine_scenario(ks) -> Dict:
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models import transformer as tf
+    from repro.perfmodel.analytical import expected_accepted_tokens
+
+    cfg = get_reduced_config("gemma_2b")
+    draft_cfg = get_reduced_config("guard_2b")
+    params, _ = tf.init_model(cfg, jax.random.PRNGKey(7))
+    draft_params, _ = tf.init_model(draft_cfg, jax.random.PRNGKey(8))
+    prompts = _prompts(cfg.vocab_size)
+
+    _run_engine(cfg, params, prompts)              # warm the plain shapes
+    _, base_streams, base_wall = _run_engine(cfg, params, prompts)
+    base_steps = sum(len(t) for t in base_streams.values())
+
+    variants = [
+        ("cold", draft_cfg, draft_params),
+        ("noisy", cfg, _noisy_params(params, NOISE_SCALE)),
+        ("perfect", cfg, params),
+    ]
+    arms = []
+    for name, dcfg, dparams in variants:
+        for k in ks:
+            eng, streams, _ = _run_engine(cfg, params, prompts, spec_k=k,
+                                          draft_cfg=dcfg,
+                                          draft_params=dparams)   # warm jits
+            eng, streams, wall = _run_engine(cfg, params, prompts, spec_k=k,
+                                             draft_cfg=dcfg,
+                                             draft_params=dparams)
+            st = eng.spec_stats()
+            cond = st["conditional_acceptance_per_position"]
+            pred = expected_accepted_tokens(k, cond)
+            prop = sum(st["proposed_per_position"])
+            acc = sum(st["accepted_per_position"])
+            arms.append({
+                "draft": name, "spec_k": k,
+                "streams_equal": streams == base_streams,
+                "tokens_per_step": st["tokens_per_step"],
+                "row_steps": st["row_steps"],
+                "iterations": st["iterations"],
+                "emitted": st["emitted"],
+                "acceptance_per_position": st["acceptance_per_position"],
+                "conditional_acceptance": cond,
+                "fitted_alpha": acc / prop if prop else 0.0,
+                "predicted_tokens_per_step": pred,
+                "calibration_error": (abs(pred - st["tokens_per_step"])
+                                      / max(pred, 1e-9)),
+                "wall_s": wall,
+            })
+    return {
+        "prompt_lens": list(PROMPT_LENS), "max_new": MAX_NEW,
+        "plain_wall_s": base_wall, "plain_target_passes": base_steps,
+        "arms": arms,
+    }
+
+
+# ---------------------------------------------------------------------------
+# analytical arm (predicted, full-size pair)
+# ---------------------------------------------------------------------------
+
+def _analytical_scenario(engine: Dict) -> Dict:
+    from repro.configs import get_config
+    from repro.perfmodel import analytical as ana
+    from repro.perfmodel.hardware import ClusterSpec, H100
+
     target = get_config("llama3_70b")
-    draft = _guard_model_2b()
+    draft = get_config("guard_2b")
     cluster = ClusterSpec(H100, n_chips=2, tp=2)
     batch, ctx = 16, 2048
     base = ana.decode_step_time(target, cluster, batch, ctx)
-    out.append(row("specdec_baseline", base.time * 1e6,
-                   f"tpot={base.time*1e3:.1f}ms tokens_per_step=1.0"))
+    sweep = []
     for k in (2, 4, 8):
         for alpha in (0.6, 0.8, 0.9):
-            t0 = time.perf_counter()
             cost, accepted = ana.speculative_decode_step(
                 target, draft, cluster, batch, ctx, k=k, alpha=alpha)
-            eff_tpot = cost.time / accepted
-            us = (time.perf_counter() - t0) * 1e6
-            speedup = base.time / eff_tpot
-            out.append(row(
-                f"specdec_k{k}_a{alpha}", us,
-                f"eff_tpot={eff_tpot*1e3:.1f}ms accepted={accepted:.2f} "
-                f"speedup={speedup:.2f}x"))
+            sweep.append({
+                "k": k, "alpha": alpha, "accepted": accepted,
+                "eff_tpot_s": cost.time / accepted,
+                "speedup": base.time / (cost.time / accepted),
+            })
+    # re-price with each engine arm's MEASURED acceptance distribution:
+    # the closed loop between real execution and the analytical model
+    measured = []
+    for a in engine["arms"]:
+        cost, accepted = ana.speculative_decode_step(
+            target, draft, cluster, batch, ctx, k=a["spec_k"],
+            alpha=a["conditional_acceptance"])
+        measured.append({
+            "draft": a["draft"], "k": a["spec_k"], "accepted": accepted,
+            "speedup": base.time / (cost.time / accepted),
+        })
+    return {"plain_tpot_s": base.time, "sweep": sweep,
+            "measured_acceptance": measured}
+
+
+# ---------------------------------------------------------------------------
+# simulator arm (SPEC_DECODE stage)
+# ---------------------------------------------------------------------------
+
+def _simulator_scenario(engine: Dict) -> Dict:
+    from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+    from repro.core.llm_scheduler import SchedulerLimits
+    from repro.core.workload import AZURE_CODE
+
+    best = max((a for a in engine["arms"] if a["draft"] == "perfect"),
+               key=lambda a: a["spec_k"])
+
+    def tpot(limits):
+        spec = SystemSpec(n_llm_clients=2, strategy="continuous",
+                          limits=limits, with_pre_post=False)
+        coord = build_system(spec)
+        wl = WorkloadConfig(trace=AZURE_CODE, rate=2.0, n_requests=30,
+                            postprocess=False, seed=41)
+        coord.submit(generate(wl))
+        return coord.run().summary()["tpot_p50"]
+
+    plain = tpot(SchedulerLimits())
+    spec = tpot(SchedulerLimits(
+        spec_k=best["spec_k"],
+        spec_acceptance=tuple(best["conditional_acceptance"])))
+    return {
+        "spec_k": best["spec_k"],
+        "acceptance": best["conditional_acceptance"],
+        "plain_tpot_p50_s": plain,
+        "spec_tpot_p50_s": spec,
+        "tpot_improvement": plain / max(spec, 1e-12),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+def run(smoke: bool = False) -> List[str]:
+    ks = SMOKE_KS if smoke else FULL_KS
+    engine = _engine_scenario(ks)
+    analytical = _analytical_scenario(engine)
+    simulator = _simulator_scenario(engine)
+    out = []
+    sfx = "_smoke" if smoke else ""
+    for a in engine["arms"]:
+        out.append(row(
+            f"specdec_engine_{a['draft']}_k{a['spec_k']}{sfx}",
+            a["wall_s"] * 1e6,
+            f"streams_equal={a['streams_equal']} "
+            f"tok_per_step={a['tokens_per_step']:.2f} "
+            f"pred={a['predicted_tokens_per_step']:.2f} "
+            f"alpha={a['fitted_alpha']:.2f} "
+            f"cal_err={a['calibration_error']:.2f}"))
+    for s in analytical["sweep"]:
+        out.append(row(
+            f"specdec_ana_k{s['k']}_a{s['alpha']}{sfx}",
+            s["eff_tpot_s"] * 1e6,
+            f"accepted={s['accepted']:.2f} speedup={s['speedup']:.2f}x"))
+    out.append(row(
+        f"specdec_sim{sfx}", simulator["spec_tpot_p50_s"] * 1e6,
+        f"tpot_improvement={simulator['tpot_improvement']:.2f}x "
+        f"k={simulator['spec_k']}"))
+    with open(JSON_PATH, "w") as f:
+        json.dump({"smoke": smoke, "cal_tol": CAL_TOL, "engine": engine,
+                   "analytical": analytical, "simulator": simulator},
+                  f, indent=2, default=float)
+    out.append(f"# wrote {JSON_PATH}")
     return out
+
+
+def check(path: str) -> int:
+    """CI gate (see module docstring)."""
+    with open(path) as f:
+        data = json.load(f)
+    rc = 0
+    tol = data["cal_tol"]
+    perfect_ok = False
+    for a in data["engine"]["arms"]:
+        tag = f"{a['draft']}/k={a['spec_k']}"
+        if not a["streams_equal"]:
+            print(f"CHECK FAIL: {tag}: speculative streams diverge from "
+                  "plain decode", file=sys.stderr)
+            rc = 1
+        if a["calibration_error"] > tol:
+            print(f"CHECK FAIL: {tag}: predicted {a['predicted_tokens_per_step']:.2f} "
+                  f"vs measured {a['tokens_per_step']:.2f} tokens/step — "
+                  f"error {a['calibration_error']:.2f} > {tol}",
+                  file=sys.stderr)
+            rc = 1
+        if a["draft"] == "perfect" and a["tokens_per_step"] > 1.0:
+            perfect_ok = True
+    if not perfect_ok:
+        print("CHECK FAIL: perfect-draft arm never committed more than one "
+              "token per verify step — speculation is not speculating",
+              file=sys.stderr)
+        rc = 1
+    if data["simulator"]["tpot_improvement"] <= 1.0:
+        print("CHECK FAIL: simulator SPEC_DECODE stage does not improve "
+              f"TPOT (x{data['simulator']['tpot_improvement']:.2f})",
+              file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        best = max(data["engine"]["arms"],
+                   key=lambda a: a["tokens_per_step"])
+        print("CHECK OK: spec streams bit-identical to plain decode; "
+              f"best arm {best['draft']}/k={best['spec_k']} commits "
+              f"{best['tokens_per_step']:.2f} tokens/step "
+              f"(predicted {best['predicted_tokens_per_step']:.2f}); "
+              "simulator TPOT improves "
+              f"x{data['simulator']['tpot_improvement']:.2f}")
+    return rc
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+    if "--check" in sys.argv:
+        raise SystemExit(check(JSON_PATH))

@@ -34,6 +34,8 @@ ARCH_IDS = (
     "hubert_xlarge",
     # the paper's own case-study model (Llama-3-70B class)
     "llama3_70b",
+    # guard/draft-class small model (pipeline safety stage + spec-decode draft)
+    "guard_2b",
 )
 
 

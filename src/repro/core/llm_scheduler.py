@@ -68,6 +68,18 @@ class SchedulerLimits:
     # macro-step event. Metrics-neutral by construction (see module doc);
     # set False to force one event per decode iteration.
     fast_forward: bool = True
+    # speculative decoding: every pure-decode step drafts ``spec_k`` tokens
+    # with the ``spec_draft`` model and verifies them in one target pass
+    # (priced by ``analytical.speculative_decode_step``). ``spec_acceptance``
+    # is either a scalar alpha (geometric acceptance) or a measured
+    # per-position CONDITIONAL distribution — e.g. the real engine's
+    # ``spec_stats()["conditional_acceptance_per_position"]``, which is how
+    # ``benchmarks/spec_decode.py`` calibrates the simulator. Fast-forward
+    # is disabled while speculation is on (variable tokens/step break the
+    # window invariants).
+    spec_k: int = 0
+    spec_draft: str = "guard_2b"
+    spec_acceptance: object = 0.8      # float | Sequence[float]
 
 
 @dataclass
@@ -82,6 +94,10 @@ class LLMStep:
     swap_bytes: float = 0.0
     swap_time: float = 0.0
     preemptions: int = 0
+    # speculative decode step: expected committed tokens per request this
+    # iteration (0.0 = plain decode, one token); finish_step integerizes
+    # through the scheduler's carry accumulator
+    spec_expected: float = 0.0
     # fast-forward macro-step window (n_steps > 1): absolute per-iteration
     # end times (== token emission times) and the per-iteration cost vectors,
     # all accumulated in event-loop order so truncation replays exactly
@@ -218,6 +234,7 @@ class ClientPerf:
         self.decode_model = None
         self.prefill_model = None
         self._memo: Dict[Tuple, ana.StageCost] = {}
+        self._spec_memo: Dict[Tuple, Tuple[ana.StageCost, float]] = {}
         if use_regression:
             from repro.perfmodel import regression as reg
             self.decode_model = reg.fit_decode_model(model_cfg, cluster)
@@ -261,6 +278,24 @@ class ClientPerf:
                                   c.flops, c.bytes, c.bound)
         return self._memo_put(key, c)
 
+    def spec_decode(self, batch: int, avg_ctx: int, draft_cfg: ModelConfig,
+                    k: int, alpha) -> Tuple[ana.StageCost, float]:
+        """Price one speculative iteration — draft ``k`` tokens with
+        ``draft_cfg`` plus one (k+1)-position verify pass on the target —
+        and its expected committed tokens. ``alpha`` is a scalar or a
+        measured per-position acceptance distribution."""
+        akey = alpha if isinstance(alpha, (int, float)) else tuple(alpha)
+        key = (batch, avg_ctx, k, akey)
+        hit = self._spec_memo.get(key)
+        if hit is not None:
+            return hit
+        out = ana.speculative_decode_step(self.cfg, draft_cfg, self.cluster,
+                                          batch, avg_ctx, k=k, alpha=alpha)
+        if len(self._spec_memo) >= self.MEMO_CAPACITY:
+            del self._spec_memo[next(iter(self._spec_memo))]
+        self._spec_memo[key] = out
+        return out
+
     def chunked(self, chunk_tokens: int, decode_batch: int,
                 avg_ctx: int) -> ana.StageCost:
         key = ("c", chunk_tokens, decode_batch, avg_ctx)
@@ -298,6 +333,14 @@ class LLMScheduler:
             capacity * limits.kv_capacity_frac, self.kv_per_token,
             block_tokens=limits.kv_block_tokens,
             swap_tiers=limits.swap_tiers)
+        # speculative decoding: draft config resolved once; the fractional
+        # expected-tokens stream integerizes through a carry accumulator so
+        # long-run emitted tokens match the expectation exactly
+        self._draft_cfg: Optional[ModelConfig] = None
+        self._spec_carry = 0.0
+        if limits.spec_k:
+            from repro.configs import get_config
+            self._draft_cfg = get_config(limits.spec_draft)
         # swap traffic incurred inside finish_step, charged to the NEXT step
         self._pending_swap_bytes = 0.0
         self._pending_swap_time = 0.0
@@ -506,6 +549,9 @@ class LLMScheduler:
         Windows of length 1 stay plain steps."""
         if not self.limits.fast_forward or step.n_steps != 1:
             return
+        if self.limits.spec_k:
+            return   # spec steps emit variable tokens; window invariants
+                     # assume exactly one per iteration
         if self.strategy not in ("continuous", "decode_only", "static"):
             return
         if step.kind != "decode" or step.prefill or not step.decode:
@@ -706,10 +752,7 @@ class LLMScheduler:
             return step
         if prefill_only or not self.running:
             return None
-        dec = self.running[: self.limits.max_batch]
-        cost = self.perf.decode(sum(r.branches for r in dec), self._avg_ctx(dec))
-        return LLMStep("decode", decode=dec, duration=cost.time,
-                       energy=cost.energy, flops=cost.flops)
+        return self._decode_step(self.running[: self.limits.max_batch])
 
     # --- pure decode (disaggregated decode client) ---------------------
     def _plan_decode_only(self) -> Optional[LLMStep]:
@@ -722,10 +765,7 @@ class LLMScheduler:
             self.running.append(r)
         if not self.running:
             return None
-        dec = self.running[: self.limits.max_batch]
-        cost = self.perf.decode(sum(r.branches for r in dec), self._avg_ctx(dec))
-        return LLMStep("decode", decode=dec, duration=cost.time,
-                       energy=cost.energy, flops=cost.flops)
+        return self._decode_step(self.running[: self.limits.max_batch])
 
     # --- chunked (Sarathi) ---------------------------------------------
     def _plan_chunked(self) -> Optional[LLMStep]:
@@ -772,8 +812,25 @@ class LLMScheduler:
         live = [r for r in self.static_batch if r.remaining_tokens > 0]
         if not live:
             return None
-        cost = self.perf.decode(sum(r.branches for r in live), self._avg_ctx(live))
-        return LLMStep("decode", decode=live, duration=cost.time,
+        return self._decode_step(live)
+
+    # ------------------------------------------------------------------
+    def _decode_step(self, dec: List[Request]) -> LLMStep:
+        """Price a pure-decode iteration. With ``limits.spec_k`` set this is
+        a SPEC_DECODE stage — one draft+verify iteration committing
+        ``spec_expected`` tokens per request in expectation — otherwise the
+        classic one-token decode step."""
+        batch = sum(r.branches for r in dec)
+        ctx = self._avg_ctx(dec)
+        if self.limits.spec_k:
+            cost, exp = self.perf.spec_decode(batch, ctx, self._draft_cfg,
+                                              self.limits.spec_k,
+                                              self.limits.spec_acceptance)
+            return LLMStep("decode", decode=dec, duration=cost.time,
+                           energy=cost.energy, flops=cost.flops,
+                           spec_expected=exp)
+        cost = self.perf.decode(batch, ctx)
+        return LLMStep("decode", decode=dec, duration=cost.time,
                        energy=cost.energy, flops=cost.flops)
 
     # ------------------------------------------------------------------
@@ -901,19 +958,32 @@ class LLMScheduler:
                     self._release_kv(r)
                 elif self.strategy != "static":
                     self.running.append(r)
+        n_emit = 1
+        if step.spec_expected and step.decode:
+            # integerize the fractional expectation through the carry so the
+            # long-run token stream matches it exactly (expected >= 1 keeps
+            # every iteration emitting at least one token)
+            self._spec_carry += step.spec_expected
+            n_emit = max(1, int(self._spec_carry))
+            self._spec_carry -= n_emit
         for r in step.decode:
             if r.remaining_tokens <= 0:
                 continue
             if not self.kv.holds(r.rid) or not self.kv.tables[r.rid].on_device:
                 continue   # preempted earlier in this very step
-            if not self._grow(r):
-                continue   # recompute-preempted itself; token not emitted
-            r.decoded_tokens += 1
+            emit = 0
+            for _ in range(min(n_emit, r.remaining_tokens)):
+                if not self._grow(r):
+                    break  # recompute-preempted itself; stop emitting
+                emit += 1
+            if not emit:
+                continue
+            r.decoded_tokens += emit
             if r.first_token_time is None:
                 r.first_token_time = now
             r.last_token_time = now
-            r.token_times.append(now)
-            self.total_tokens += r.branches
+            r.token_times.extend([now] * emit)
+            self.total_tokens += r.branches * emit
             if r.remaining_tokens <= 0 and self.strategy != "static":
                 finished.append(r)
                 self._release_kv(r)

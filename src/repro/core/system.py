@@ -67,10 +67,10 @@ def _embed_model_small() -> ModelConfig:
 
 
 def _guard_model_2b() -> ModelConfig:
-    from repro.configs.base import ModelConfig as MC
-    return MC(name="guard-2b", family="dense", num_layers=18, d_model=2048,
-              num_heads=16, num_kv_heads=16, d_ff=8192, vocab_size=32000,
-              mlp_type="gelu", attn_type="gqa")
+    """Kept as a thin alias into the config registry (the canonical home is
+    ``configs/guard_2b.py``; simulator callers import it from here)."""
+    from repro.configs import get_config
+    return get_config("guard_2b")
 
 
 def build_system(spec: SystemSpec) -> Coordinator:

@@ -30,6 +30,12 @@ fidelity benchmark compares like with like — see ``docs/architecture.md``):
 * **Recompute drop** releases everything; the engine re-prefills on
   re-admission (keeping the tokens generated so far — the resume prompt is
   ``prompt + generated[:-1]``).
+* **Speculative forks** (``fork_table`` / ``commit_fork`` / ``abort_fork``)
+  extend a table by k tentative KV slots behind a copy-on-write boundary:
+  shared or radix-registered pages in the write range are swapped for
+  private copies and fresh pages are grown, so the draft-and-verify engine
+  can reject speculation without ever having written a page someone else
+  can see — the real-execution twin of the simulator's PR-2 radix COW.
 
 Unlike the simulator allocator there is no overcommit: a physical pool
 cannot hold more pages than it has, so an allocation that cannot be met even
@@ -83,6 +89,24 @@ class PagedTable:
     host_pages: Optional[Dict] = None  # leaf-path -> np.ndarray when swapped
 
 
+@dataclass
+class Fork:
+    """An in-flight speculative extension of one table (``fork_table``).
+
+    Holds everything needed to abort back to the pre-fork state: the
+    original block list / fill length / registered-chain prefix, which
+    shared-or-registered blocks were COW'd out (``(index, old, new)``), and
+    which fresh blocks were grown past the original table. COW'd-out
+    original blocks stay refcounted by the fork itself until commit/abort
+    resolves who keeps them."""
+    rid: int
+    base_blocks: List[int]
+    base_tokens: int
+    base_hashes: List[int]
+    cow: List[Tuple[int, int, int]] = field(default_factory=list)
+    grown: List[int] = field(default_factory=list)
+
+
 class PagedKVStore:
     """Free list + refcounts + radix prefix index over a physical page pool.
 
@@ -97,6 +121,7 @@ class PagedKVStore:
         self.trash_block = self.num_blocks      # engine's sentinel page id
         self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
         self.tables: Dict[int, PagedTable] = {}
+        self.forks: Dict[int, Fork] = {}        # rid -> active fork
         self.refcount: Dict[int, int] = {}
         self.nodes: Dict[int, _Node] = {}       # chain hash -> node
         self.by_block: Dict[int, int] = {}      # block -> chain hash
@@ -311,6 +336,8 @@ class PagedKVStore:
         chain position is known register as they are faulted in, so a
         chunked prefill publishes its prefix block by block exactly like a
         whole prefill publishes at admission."""
+        assert rid not in self.forks, \
+            f"rid={rid}: grow during an active fork (fork_table sizes growth)"
         t = self.tables[rid]
         assert t.on_device
         i = len(t.blocks)
@@ -337,14 +364,101 @@ class PagedKVStore:
         return b
 
     def advance(self, rid: int, n: int = 1):
+        assert rid not in self.forks, \
+            f"rid={rid}: advance during an active fork (use commit_fork)"
         t = self.tables[rid]
         t.tokens += n
         assert t.tokens <= len(t.blocks) * self.block_tokens, \
             f"rid={rid} wrote past its block table"
 
+    # -- speculative forks ---------------------------------------------------
+    def fork_table(self, rid: int, extra_tokens: int) -> Optional[Fork]:
+        """Open a copy-on-write fork covering ``extra_tokens`` speculative
+        KV slots past the table's fill front.
+
+        Any block in the speculative write range (block index
+        ``>= tokens // block_tokens``) that is shared (refcount > 1) or
+        registered in the radix index is COW'd out: the table row gets a
+        fresh private page (the engine device-copies the old page's content
+        into it before writing) and the original keeps its refcount — held
+        by the fork — so shared owners and the prefix cache can never see a
+        speculative write, accepted or not. Fresh blocks are then grown so
+        the table covers ``tokens + extra_tokens`` slots. Exactly one of
+        ``commit_fork`` / ``abort_fork`` must follow.
+
+        Returns None (counting a page fault) when the pool cannot supply
+        the fresh pages — nothing is mutated; the engine preempts a victim
+        and retries, the same contract as ``grow``."""
+        t = self.tables[rid]
+        assert t.on_device, "cannot fork a swapped table"
+        assert rid not in self.forks, f"rid={rid} already has an active fork"
+        assert extra_tokens >= 0
+        need_total = self.blocks_for_tokens(t.tokens + extra_tokens)
+        first_write = t.tokens // self.block_tokens
+        cow_idx = [i for i in range(first_write, len(t.blocks))
+                   if self.refcount.get(t.blocks[i], 1) > 1
+                   or t.blocks[i] in self.by_block]
+        n_fresh = max(0, need_total - len(t.blocks)) + len(cow_idx)
+        self._reclaim(n_fresh)
+        if len(self._free) < n_fresh:
+            self.page_faults += 1
+            return None
+        fork = Fork(rid, list(t.blocks), t.tokens, list(t.hashes))
+        fresh = self._take(n_fresh)
+        for i, nb in zip(cow_idx, fresh[:len(cow_idx)]):
+            fork.cow.append((i, t.blocks[i], nb))
+            t.blocks[i] = nb
+        if cow_idx:
+            # the table's blocks no longer follow the registered chain past
+            # the first COW point (the replacement page is unregistered)
+            t.hashes = t.hashes[:cow_idx[0]]
+        fork.grown = fresh[len(cow_idx):]
+        t.blocks.extend(fork.grown)
+        self.forks[rid] = fork
+        self.peak_blocks = max(self.peak_blocks, self.used_blocks)
+        return fork
+
+    def commit_fork(self, rid: int, n_tokens: int):
+        """Accept ``n_tokens`` speculative tokens: the forked layout becomes
+        the table's real state. COW'd-out originals are released (shared
+        owners / the radix cache keep them alive); grown blocks beyond the
+        committed fill front return to the free list — but never blocks the
+        table already held before the fork."""
+        f = self.forks.pop(rid)
+        t = self.tables[rid]
+        assert n_tokens >= 0
+        t.tokens = f.base_tokens + n_tokens
+        assert t.tokens <= len(t.blocks) * self.block_tokens, \
+            f"rid={rid} committed past its forked table"
+        for _, old, _ in f.cow:
+            self._decref(old)
+        keep = max(self.blocks_for_tokens(t.tokens), len(f.base_blocks))
+        for b in reversed(t.blocks[keep:]):
+            self._decref(b)
+        del t.blocks[keep:]
+
+    def abort_fork(self, rid: int):
+        """Reject the speculation entirely: restore the pre-fork table.
+        COW replacement pages and grown pages are released; the originals
+        (kept alive by the fork's refcounts) return to the table row. The
+        fill front is untouched, so shared-prefix content is exactly as it
+        was — speculative writes only ever landed in pages this fork owned
+        privately."""
+        f = self.forks.pop(rid)
+        t = self.tables[rid]
+        for b in reversed(f.grown):
+            self._decref(b)
+        for _, _, new in f.cow:
+            self._decref(new)
+        t.blocks = list(f.base_blocks)
+        t.hashes = list(f.base_hashes)
+        t.tokens = f.base_tokens
+
     def free(self, rid: int):
         """Release every reference (completion). Registered blocks stay
         resident as evictable cache; the rest return to the free list."""
+        assert rid not in self.forks, \
+            f"rid={rid}: free during an active fork (resolve it first)"
         t = self.tables.pop(rid)
         if not t.on_device:
             t.host_pages = None
@@ -359,6 +473,8 @@ class PagedKVStore:
         pages — those victims degrade to recompute, exactly like the
         simulator's composition rule. The store releases the device blocks;
         the engine stores the gathered pages on the table record."""
+        assert rid not in self.forks, \
+            f"rid={rid}: swap_out during an active fork (abort it first)"
         t = self.tables[rid]
         assert t.on_device
         keep = self.blocks_for_tokens(t.tokens)
@@ -413,6 +529,9 @@ class PagedKVStore:
         for t in self.tables.values():
             if t.on_device:
                 expect.update(t.blocks)
+        for f in self.forks.values():
+            # COW'd-out originals are held by the fork until commit/abort
+            expect.update(old for _, old, _ in f.cow)
         assert dict(expect) == self.refcount, "refcount drift"
         live = sorted(expect)
         cached = sorted(self._cached)
@@ -422,6 +541,9 @@ class PagedKVStore:
         for b in self.by_block:
             assert b in expect or b in self._cached, \
                 "radix entry points at a non-resident block"
+        for rid in self.forks:
+            assert rid in self.tables and self.tables[rid].on_device, \
+                "fork outlived its table"
         for h, node in self.nodes.items():
             if node.parent is not None:
                 assert self.nodes.get(node.parent.hash) is node.parent, \

@@ -36,6 +36,14 @@ Interface contract (paged ``Engine``)
   later admission whose prompt shares the block-aligned prefix maps the same
   physical pages (refcount bump — real dedup, visible in
   ``Engine.kv_stats()``).
+* Speculative decoding (``EngineConfig(draft_cfg=..., spec_k=...)``): each
+  iteration drafts up to ``spec_k`` greedy tokens per row with a small draft
+  model (its own paged pool), COW-forks the target block tables
+  (``PagedKVStore.fork_table``), scores draft + bonus positions in ONE
+  target pass (``paged_verify_attention``), and commits the longest
+  agreeing prefix — rejected KV rolls back via ``abort``/trim, so greedy
+  streams stay bit-identical to plain decode while emitting up to
+  ``spec_k + 1`` tokens per target pass.
 * Preemption (``preemption="swap" | "recompute"``) is *real*:
   swap moves the victim's pages device -> host (``jax.device_get`` of the
   gathered pages; ``jax.device_put`` scatters them back on resume) and
@@ -90,11 +98,27 @@ class EngineConfig:
       defaults to ``max_len``. Raising it (multiple of ``block_tokens``)
       lets the chunked engine serve prompts far beyond ``max_len`` — the
       per-pass working set stays ``chunk_size`` wide regardless.
+
+    Speculative decoding (``draft_cfg`` + ``spec_k``, requires
+    ``chunk_size == 0``): every iteration runs a small draft model for up
+    to ``spec_k`` greedy tokens per row, verifies them in ONE target pass
+    (``paged_verify_attention``), and commits the longest matching prefix
+    plus the bonus token — up to ``spec_k + 1`` tokens per target pass
+    instead of 1, with greedy streams bit-identical to plain decode.
+
+    * ``draft_cfg`` — ModelConfig of the draft model (gqa-family, same
+      vocab as the target). None disables speculation.
+    * ``spec_k`` — draft tokens proposed per iteration (0 disables).
+    * ``draft_seed`` — init seed for the draft params when the engine is
+      not handed ``draft_params`` explicitly.
     """
     chunk_size: int = 0
     token_budget: int = 0
     decode_share: float = 0.0
     max_context: int = 0
+    draft_cfg: Optional[ModelConfig] = None
+    spec_k: int = 0
+    draft_seed: int = 1
 
 
 @dataclass
@@ -145,7 +169,7 @@ class Engine:
                  max_len: int = 512, seed: int = 0, block_tokens: int = 16,
                  num_blocks: Optional[int] = None, preemption: str = "swap",
                  trace_occupancy: bool = False,
-                 config: Optional[EngineConfig] = None):
+                 config: Optional[EngineConfig] = None, draft_params=None):
         assert max_len % block_tokens == 0, \
             "max_len must be a multiple of block_tokens (bit-exact parity " \
             "with the dense engine needs identical logical cache length)"
@@ -241,6 +265,73 @@ class Engine:
         self._gather_pages = _gather_pages
         self._scatter_pages = _scatter_pages
 
+        # -- speculative decoding (draft model + verify pass) ----------
+        self.spec_k = self.config.spec_k
+        self.draft_cfg = self.config.draft_cfg
+        self.spec = self.draft_cfg is not None and self.spec_k > 0
+        if self.spec:
+            assert self.chunk_size == 0, \
+                "speculative decoding needs the whole-prefill path " \
+                "(EngineConfig.chunk_size == 0)"
+            assert paged_supported(self.draft_cfg), \
+                "draft model must serve through the paged cache path"
+            assert self.draft_cfg.vocab_size == cfg.vocab_size, \
+                "draft and target must share a vocabulary"
+            dcfg = self.draft_cfg
+            if draft_params is None:
+                draft_params, _ = tf.init_model(
+                    dcfg, jax.random.PRNGKey(self.config.draft_seed))
+            self.draft_params = draft_params
+            # the draft pool is sized so it can NEVER hit pressure: capacity
+            # planning stays a target-pool problem and draft admission is
+            # infallible (a draft page is kvh*hd of a tiny model — cheap)
+            self.draft_store = PagedKVStore(max_batch * self.max_blocks,
+                                            block_tokens)
+            self.draft_caches = tf.init_paged_cache(
+                dcfg, max_batch, self.draft_store.num_blocks, block_tokens,
+                self.max_blocks)
+            self._draft_tables_np = np.full(
+                (max_batch, self.max_blocks), self.draft_store.trash_block,
+                np.int32)
+            self._draft_lengths_np = np.zeros((max_batch,), np.int32)
+            # rid -> number of leading draft-cache positions whose KV matches
+            # the request's true token stream (rewind point for re-drafting)
+            self._draft_valid: Dict[int, int] = {}
+            # acceptance accounting for calibration (spec_stats())
+            self.spec_iters = 0
+            self.spec_row_steps = 0
+            self.spec_emitted = 0
+            self._spec_pos_proposed = np.zeros((self.spec_k,), np.int64)
+            self._spec_pos_accepted = np.zeros((self.spec_k,), np.int64)
+
+            @jax.jit
+            def _draft_prefill(params, tokens):
+                return steps.prefill_step(params, {"tokens": tokens}, dcfg,
+                                          max_len)
+
+            @jax.jit
+            def _draft_decode(params, tokens, caches):
+                return steps.serve_step(params, tokens, caches, dcfg)
+
+            @jax.jit
+            def _verify(params, tokens, q_valid, caches):
+                return steps.verify_step(params, tokens, q_valid, caches, cfg)
+
+            @jax.jit
+            def _copy_pages(caches, src, dst):
+                out = {}
+                for name, g in caches.items():
+                    gg = dict(g)
+                    gg["k_pool"] = g["k_pool"].at[:, dst].set(g["k_pool"][:, src])
+                    gg["v_pool"] = g["v_pool"].at[:, dst].set(g["v_pool"][:, src])
+                    out[name] = gg
+                return out
+
+            self._draft_prefill = _draft_prefill
+            self._draft_decode = _draft_decode
+            self._verify = _verify
+            self._copy_pages = _copy_pages
+
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> EngineRequest:
@@ -296,6 +387,17 @@ class Engine:
         tabs = jnp.asarray(self._tables_np if tables is None else tables)
         lens = jnp.asarray(self._lengths_np if lengths is None else lengths)
         for g in self.caches.values():
+            L = g["block_tables"].shape[0]
+            g["block_tables"] = jnp.broadcast_to(tabs[None], (L, *tabs.shape))
+            g["length"] = jnp.broadcast_to(lens[None], (L, *lens.shape))
+
+    def _push_draft_rows(self, tables: Optional[np.ndarray] = None,
+                         lengths: Optional[np.ndarray] = None):
+        """Same as ``_push_rows`` for the draft model's cache groups."""
+        tabs = jnp.asarray(self._draft_tables_np if tables is None else tables)
+        lens = jnp.asarray(self._draft_lengths_np if lengths is None
+                           else lengths)
+        for g in self.draft_caches.values():
             L = g["block_tables"].shape[0]
             g["block_tables"] = jnp.broadcast_to(tabs[None], (L, *tabs.shape))
             g["length"] = jnp.broadcast_to(lens[None], (L, *lens.shape))
@@ -370,7 +472,30 @@ class Engine:
         self._admit_order[r.rid] = self._admit_seq
         self._admit_seq += 1
         self.active[slot] = r
+        if self.spec:
+            self._admit_draft(r)
         return True
+
+    def _admit_draft(self, r: EngineRequest):
+        """(Re-)prefill the DRAFT model over ``r``'s resume context. Runs at
+        every admission path — fresh, recompute resume, swap-in — because
+        draft KV is never swapped: it is dropped at preemption and rebuilt
+        here (a small-model prefill is cheaper than round-tripping its
+        pages, and it keeps host memory accounting target-only)."""
+        ctx = r.ctx
+        got = self.draft_store.allocate(r.rid, len(ctx), ())
+        assert got is not None, "draft pool is sized to never run out"
+        blocks, _ = got
+        _, dense = self._draft_prefill(self.draft_params,
+                                       jnp.asarray(ctx[None, :]))
+        dids = np.full((self.max_blocks,), self.draft_store.trash_block,
+                       np.int32)
+        dids[:len(blocks)] = blocks
+        self.draft_caches = self._write_prefill(self.draft_caches, dense,
+                                                jnp.asarray(dids))
+        self._draft_tables_np[r.slot] = dids
+        self._draft_lengths_np[r.slot] = len(ctx)
+        self._draft_valid[r.rid] = len(ctx)
 
     def _admit(self):
         for slot in range(self.max_batch):
@@ -391,6 +516,17 @@ class Engine:
             return
         policy = policy or self.preemption
         rid = r.rid
+        if self.spec:
+            # a mid-step victim may hold a speculative fork: roll the target
+            # table back to its committed base before swap/drop, and drop the
+            # draft KV outright (rebuilt by _admit_draft on resume)
+            if rid in self.store.forks:
+                self.store.abort_fork(rid)
+            if rid in self.draft_store.tables:
+                self.draft_store.free(rid)
+            self._draft_valid.pop(rid, None)
+            self._draft_tables_np[slot] = self.draft_store.trash_block
+            self._draft_lengths_np[slot] = 0
         if policy == "swap":
             blocks = self.store.swap_out(rid)
             if blocks is None:                 # shared pages: degrade
@@ -465,6 +601,12 @@ class Engine:
     def _finish(self, r: EngineRequest, now: float):
         r.finish_time = now
         r.state = "done"
+        if self.spec:
+            if r.rid in self.draft_store.tables:
+                self.draft_store.free(r.rid)
+            self._draft_valid.pop(r.rid, None)
+            self._draft_tables_np[r.slot] = self.draft_store.trash_block
+            self._draft_lengths_np[r.slot] = 0
         self.store.free(r.rid)
         del self._admit_order[r.rid]       # rids never reuse: don't leak
         self.finished.append(r)
@@ -514,6 +656,203 @@ class Engine:
                                                jnp.asarray(last), self.caches)
         self._decode_bookkeeping(np.asarray(new_tok))
         self._trace_step()
+
+    # -- speculative iteration (draft k, verify in one target pass) -----
+    def _step_spec(self):
+        """One speculative iteration over the active (decode-phase) rows:
+
+        1. DRAFT — rewind each row's draft cache to its last
+           stream-consistent position, catch it up on the true stream, then
+           roll the draft forward for up to ``k_eff`` greedy tokens (batched
+           ``(b, 1)`` passes; rows done drafting sit out as trash/0).
+        2. FORK — COW-fork each row's target block table
+           (``PagedKVStore.fork_table``) so the verify pass may write KV at
+           positions ``L .. L + k_eff`` without touching committed pages;
+           capacity faults preempt peers exactly like ``_grow_active``.
+        3. VERIFY — one ``(b, spec_k + 1)`` target pass feeds the last
+           committed token plus the draft tokens; ``greedy[:, j]`` is
+           bit-identical to what sequential decode would emit at that
+           position (``paged_verify_attention`` contract).
+        4. ACCEPT — per row, emit greedy tokens while they confirm the
+           draft, plus the bonus token, applying the stop conditions
+           token-by-token; ``commit_fork`` keeps KV for what was emitted and
+           rolls back the rest.
+
+        Streams are bit-identical to ``_step_decode`` because verify
+        reproduces sequential numerics exactly and acceptance only decides
+        how MANY of those tokens commit per pass (1..k_eff+1, never 0)."""
+        live = [r for r in self.active if r is not None]
+        limit = self._len_limit
+        k_eff: Dict[int, int] = {}
+        for r in live:
+            # k_eff caps so the verify feed never proposes past the stop
+            # bounds: at most max_new - 1 further tokens ride behind the
+            # guaranteed bonus token, and writes stay inside the table
+            L = int(self._lengths_np[r.slot])
+            k_eff[r.rid] = max(0, min(self.spec_k,
+                                      r.max_new_tokens - len(r.tokens) - 1,
+                                      limit - 1 - L))
+
+        # -- 1. draft phase --------------------------------------------
+        drafts: Dict[int, List[int]] = {r.rid: [] for r in live}
+        queues: Dict[int, List[int]] = {}
+        part = [r for r in live if k_eff[r.rid] > 0]
+        for r in part:
+            dv = self._draft_valid[r.rid]
+            L = int(self._lengths_np[r.slot])
+            stream = np.concatenate([r.ctx, np.asarray(r.tokens, np.int32)])
+            # feeding stream[dv..L] rewrites draft KV at positions dv..L
+            # (overwriting any rejected-draft garbage) and the LAST feed's
+            # output is the first draft token
+            queues[r.rid] = [int(t) for t in stream[dv:L + 1]]
+            self._draft_lengths_np[r.slot] = dv
+        while part:
+            feed = np.zeros((self.max_batch, 1), np.int32)
+            tabs = np.full_like(self._draft_tables_np,
+                                self.draft_store.trash_block)
+            lens = np.zeros_like(self._draft_lengths_np)
+            for r in part:
+                q = queues[r.rid]
+                feed[r.slot, 0] = q.pop(0) if q else drafts[r.rid][-1]
+                D = int(self._draft_lengths_np[r.slot])
+                dt = self.draft_store.tables[r.rid]
+                while len(dt.blocks) * self.block_tokens <= D:
+                    b = self.draft_store.grow(r.rid)
+                    assert b is not None, "draft pool sized to never run out"
+                    self._draft_tables_np[r.slot, len(dt.blocks) - 1] = b
+                tabs[r.slot] = self._draft_tables_np[r.slot]
+                lens[r.slot] = D
+            self._push_draft_rows(tabs, lens)
+            out, _, self.draft_caches = self._draft_decode(
+                self.draft_params, jnp.asarray(feed), self.draft_caches)
+            out = np.asarray(out)
+            nxt = []
+            for r in part:
+                D = int(self._draft_lengths_np[r.slot])
+                dt = self.draft_store.tables[r.rid]
+                if D + 1 > dt.tokens:      # store tracks the high-water mark
+                    self.draft_store.advance(r.rid, D + 1 - dt.tokens)
+                self._draft_lengths_np[r.slot] = D + 1
+                if not queues[r.rid]:
+                    drafts[r.rid].append(int(out[r.slot]))
+                if queues[r.rid] or len(drafts[r.rid]) < k_eff[r.rid]:
+                    nxt.append(r)
+            part = nxt
+
+        # -- 2. fork target tables -------------------------------------
+        for r in live:
+            if r.slot is None or self.active[r.slot] is not r:
+                continue                   # evicted by a peer's fork below
+            while True:
+                f = self.store.fork_table(r.rid, k_eff[r.rid] + 1)
+                if f is not None:
+                    break
+                if not self._make_room(r.rid):
+                    raise RuntimeError(
+                        "KV pool exhausted with no preemptable victim")
+            self._tables_np[r.slot] = self._pad_ids(
+                self.store.tables[r.rid].blocks)
+            if f.cow:
+                # device-copy the COW'd pages so the fork's private copies
+                # hold the shared prefix content the verify pass reads
+                src = jnp.asarray(np.asarray([o for _, o, _ in f.cow],
+                                             np.int32))
+                dst = jnp.asarray(np.asarray([n for _, _, n in f.cow],
+                                             np.int32))
+                self.caches = self._copy_pages(self.caches, src, dst)
+
+        # -- 3. verify pass --------------------------------------------
+        live = [r for r in live
+                if r.slot is not None and self.active[r.slot] is r]
+        if not live:
+            self._trace_step()
+            return
+        toks = np.zeros((self.max_batch, self.spec_k + 1), np.int32)
+        q_valid = np.zeros((self.max_batch,), np.int32)
+        for r in live:
+            k = k_eff[r.rid]
+            toks[r.slot, 0] = r.tokens[-1]
+            toks[r.slot, 1:1 + k] = drafts[r.rid][:k]
+            q_valid[r.slot] = k + 1
+        self._push_rows()
+        greedy, _, self.caches = self._verify(
+            self.params, jnp.asarray(toks), jnp.asarray(q_valid), self.caches)
+        greedy = np.asarray(greedy)
+
+        # -- 4. accept, emit, commit -----------------------------------
+        now = time.monotonic()
+        for r in live:
+            k = k_eff[r.rid]
+            d = drafts[r.rid]
+            a = 0
+            while a < k and d[a] == int(greedy[r.slot, a]):
+                a += 1
+            self._spec_pos_proposed[:k] += 1
+            self._spec_pos_accepted[:a] += 1
+            L = int(self._lengths_np[r.slot])
+            m, done = 0, False
+            for j in range(a + 1):
+                t = int(greedy[r.slot, j])
+                r.tokens.append(t)
+                r.token_times.append(now)
+                m += 1
+                if (len(r.tokens) >= r.max_new_tokens
+                        or (r.eos_id is not None and t == r.eos_id)
+                        or len(r.prompt) + len(r.tokens) >= limit - 1):
+                    done = True
+                    break
+            self.store.commit_fork(r.rid, m)
+            self._tables_np[r.slot] = self._pad_ids(
+                self.store.tables[r.rid].blocks)
+            self._lengths_np[r.slot] = min(L + m, limit - 1)
+            self.spec_emitted += m
+            self.spec_row_steps += 1
+            if done:
+                self._finish(r, now)
+            elif k:
+                # draft KV is valid through the accepted prefix (positions
+                # L+1..L+min(k-1, a, m) hold confirmed draft tokens), capped
+                # at L+m so the next catch-up re-feeds at least the newest
+                # token
+                self._draft_valid[r.rid] = min(L + m,
+                                               L + 1 + min(k - 1, a, m))
+        self.spec_iters += 1
+        self._trace_step()
+
+    def spec_stats(self) -> Dict[str, object]:
+        """Acceptance telemetry for calibration: the measured per-position
+        CONDITIONAL acceptance distribution feeds
+        ``perfmodel.speculative_decode_step`` and the simulator's SPEC_DECODE
+        pricing instead of an assumed geometric alpha
+        (``benchmarks/spec_decode.py`` closes the loop).
+
+        ``acceptance_per_position[i]`` is the *marginal* P(draft positions
+        0..i all accepted) — acceptance stops at the first rejection, so the
+        raw accepted/proposed ratio is already a cumulative product.
+        ``conditional_acceptance_per_position[i]`` divides out the previous
+        position's marginal to recover P(accept i | accepted 0..i-1) — the
+        alpha_i sequence ``expected_accepted_tokens`` compounds."""
+        prop = self._spec_pos_proposed
+        acc = self._spec_pos_accepted
+        marginal = [float(a) / p if p else 0.0 for a, p in zip(acc, prop)]
+        cond, prev = [], 1.0
+        for m in marginal:
+            cond.append(min(1.0, m / prev) if prev > 0 else 0.0)
+            prev = m
+        return {
+            "spec_k": self.spec_k,
+            "iterations": self.spec_iters,
+            "row_steps": self.spec_row_steps,
+            "emitted": self.spec_emitted,
+            # mean tokens a row commits per target pass it takes part in —
+            # the direct analogue of 1.0 for plain decode
+            "tokens_per_step": (self.spec_emitted / self.spec_row_steps
+                                if self.spec_row_steps else 0.0),
+            "proposed_per_position": [int(x) for x in prop],
+            "accepted_per_position": [int(x) for x in acc],
+            "acceptance_per_position": marginal,
+            "conditional_acceptance_per_position": cond,
+        }
 
     # -- mixed iteration (chunked prefill + continuous batching) --------
     def _chunk_budget(self, n_dec: int) -> int:
@@ -604,7 +943,10 @@ class Engine:
         self._trace_step()
 
     def run(self, max_steps: int = 100_000) -> List[EngineRequest]:
-        step = self._step_mixed if self.chunk_size else self._step_decode
+        if self.spec:
+            step = self._step_spec
+        else:
+            step = self._step_mixed if self.chunk_size else self._step_decode
         while (self.waiting or any(a is not None for a in self.active)) \
                 and self.steps < max_steps:
             self._admit()
@@ -632,7 +974,7 @@ def make_engine(cfg: ModelConfig, **kw):
     if paged_supported(cfg):
         return Engine(cfg, **kw)
     for k in ("block_tokens", "num_blocks", "preemption", "trace_occupancy",
-              "config"):
+              "config", "draft_params"):
         kw.pop(k, None)
     return SlotEngine(cfg, **kw)
 

@@ -62,6 +62,24 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
                                        lengths, scale=scale)
 
 
+def paged_verify_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           scale: float | None = None):
+    """Speculative-verify attention: score all s = k+1 draft positions of
+    each row in one pass over the block table (query j sits at logical
+    position ``lengths + j``). On CPU the reference unrolls into per-position
+    ``decode_attention`` calls, which makes each position bit-identical to a
+    sequential paged decode at the same position — the property the engine's
+    spec-vs-plain stream-equality contract rests on."""
+    mode = _mode()
+    if mode != "ref" and q.shape[-1] == v_pool.shape[-1] \
+            and q.shape[-1] % 128 == 0:
+        return _pa.paged_verify_attention(q, k_pool, v_pool, block_tables,
+                                          lengths, scale=scale,
+                                          interpret=(mode == "interpret"))
+    return _ref.paged_verify_attention(q, k_pool, v_pool, block_tables,
+                                       lengths, scale=scale)
+
+
 def paged_chunk_attention(q, k_pool, v_pool, block_tables, lengths, *,
                           scale: float | None = None):
     """Chunked-prefill attention over pooled KV pages: query j of row r sits

@@ -143,3 +143,113 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       qr, k_pool, v_pool)
     return out.reshape(b, 1, nh, dv)
+
+
+def _paged_verify_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float,
+                         block_tokens: int, s: int, g: int):
+    """Speculative-verify analogue of ``_paged_decode_kernel``.
+
+    Per (batch row, kv head) the query block holds all ``s = k + 1`` draft
+    positions flattened with their query-head group into ``s * g`` rows; row
+    ``r`` is draft position ``r // g``, which attends causally over pooled
+    positions ``<= length + r // g``. One pass over the page axis scores
+    every draft position — the online-softmax scratch simply carries
+    ``s * g`` lanes instead of ``g``.
+    """
+    bi = pl.program_id(0)
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[bi]
+    s_start = si * block_tokens
+
+    # The furthest-ahead draft position attends through pooled position
+    # length + s - 1; later pages hold nothing any query row may read.
+    @pl.when(s_start < length + s)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (s*g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bt, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bt, dv)
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        span = s_start + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        qpos = length + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0) // g
+        sc = jnp.where(span <= qpos, sc, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[:, None])
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_verify_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """Score ``s = k + 1`` draft positions per row in ONE pass over the block
+    table: query ``j`` of row ``i`` sits at logical position
+    ``lengths[i] + j`` and attends over pooled positions
+    ``<= lengths[i] + j``. The draft tokens' K/V must already be scattered
+    into the pools at those positions (caller writes before attending).
+    Layout/trash-page conventions are identical to ``paged_decode_attention``;
+    the table must cover ``lengths[i] + s`` logical positions per live row.
+    Returns ``(b, s, nh, dv)``."""
+    b, s, nh, d = q.shape
+    bt, kvh = k_pool.shape[1], k_pool.shape[2]
+    g = nh // kvh
+    dv = v_pool.shape[-1]
+    max_blocks = block_tables.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+
+    # (b, s, nh, d) -> (b, kvh, s*g, d): draft position major, group minor,
+    # so kernel row r maps to (position r // g, group r % g).
+    qr = q.reshape(b, s, kvh, g, d).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(b, kvh, s * g, d)
+    grid = (b, kvh, max_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, s * g, d),
+                         lambda bi, hi, si, tab, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bt, 1, d),
+                         lambda bi, hi, si, tab, lens: (tab[bi, si], 0, hi, 0)),
+            pl.BlockSpec((1, bt, 1, dv),
+                         lambda bi, hi, si, tab, lens: (tab[bi, si], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s * g, dv),
+                               lambda bi, hi, si, tab, lens: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((s * g,), jnp.float32),
+            pltpu.VMEM((s * g,), jnp.float32),
+            pltpu.VMEM((s * g, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_verify_kernel, scale=scale, block_tokens=bt,
+                          s=s, g=g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, s * g, dv), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qr, k_pool, v_pool)
+    return out.reshape(b, kvh, s, g, dv).transpose(0, 2, 1, 3, 4) \
+              .reshape(b, s, nh, dv)

@@ -159,6 +159,36 @@ def paged_chunk_attention(q, k_pool, v_pool, block_tables, lengths, *,
     return out.reshape(b, s, nh, v.shape[-1]).astype(q.dtype)
 
 
+def paged_verify_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           scale: float | None = None):
+    """Speculative-verify attention over paged KV: score k draft tokens (plus
+    the preceding committed token) in ONE target pass over the block table.
+
+    q: (b, s, nh, dq) with s = k + 1 — query ``j`` of row ``r`` sits at
+    logical position ``lengths[r] + j`` and attends over pooled positions
+    ``< lengths[r] + j + 1`` (cached context + itself + earlier draft
+    positions). The draft tokens' K/V must already be scattered into the
+    pools at those positions (the caller writes before attending, exactly
+    like the chunk pass).
+
+    Numerics deliberately mirror ``decode_attention``, NOT the chunk path:
+    position ``j``'s output must be bit-identical to what a sequential
+    one-token decode (``paged_decode_attention`` with ``lengths + j + 1``)
+    would produce at the same position, because the engine's bit-equality
+    contract compares the speculative stream against plain greedy decode.
+    The python unroll over the (small, static) ``s`` makes that exact by
+    construction: each position IS the decode oracle. Masked positions
+    contribute probability exactly 0, so garbage beyond a row's span
+    (trash page, rejected writes from earlier iterations) cannot perturb
+    the output.
+    """
+    k = gather_paged_kv(k_pool, block_tables)
+    v = gather_paged_kv(v_pool, block_tables)
+    outs = [decode_attention(q[:, j:j + 1], k, v, lengths + j + 1, scale=scale)
+            for j in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
 def pq_scan(codes, lut):
     """IVF-PQ asymmetric-distance scan.
 

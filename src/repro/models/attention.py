@@ -264,6 +264,64 @@ def gqa_prefill_paged(params, x, cfg: ModelConfig, cache: Dict,
                  "length": lengths + q_valid}
 
 
+def gqa_verify_paged(params, x, cfg: ModelConfig, cache: Dict,
+                     q_valid: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Speculative-verify pass against a *paged* cache: row ``r`` carries
+    ``q_valid[r]`` feed tokens — the last committed token plus its draft
+    continuation — occupying logical positions ``cache["length"][r] + j``.
+
+    Scatter recipe (rope positions, trash-page routing of padding and dead
+    rows, flat-slot K/V writes) is exactly ``gqa_prefill_paged``'s; the
+    attention is ``ops.paged_verify_attention``, whose position ``j``
+    output is bit-identical to a one-token ``gqa_decode_paged`` at the same
+    position. That makes the verify logits for position ``j`` — given the
+    same committed stream — bitwise equal to sequential decode logits, the
+    property the engine's spec-vs-plain stream-equality contract rests on.
+
+    The caller must have fork-grown the table to cover ``length + q_valid``
+    slots, with every block in the write range private (refcount 1,
+    unregistered) — ``PagedKVStore.fork_table`` guarantees both. Rejected
+    positions' writes stay as garbage beyond the committed length; the
+    exact-zero mask means no later pass can observe them, and
+    ``commit_fork`` trims the pages they rode in on.
+    """
+    from repro.kernels import ops
+
+    hd = cfg.resolved_head_dim
+    lengths = cache["length"]
+    tables = cache["block_tables"]
+    k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+    bt, mb = k_pool.shape[1], tables.shape[1]
+    b, s, _ = x.shape
+    j = jnp.arange(s)[None, :]
+    pos = lengths[:, None] + j                       # (b, s) logical pos
+    valid_q = j < q_valid[:, None]                   # (b, s)
+
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    blk = jnp.take_along_axis(tables, jnp.clip(pos // bt, 0, mb - 1), axis=1)
+    trash = k_pool.shape[0] - 1
+    slot = jnp.where(valid_q, blk * bt + pos % bt, trash * bt + j % bt)
+
+    def upd(pool, new):
+        flat = pool.reshape(-1, *pool.shape[2:])
+        flat = flat.at[slot.reshape(-1)].set(
+            new.reshape(b * s, *new.shape[2:]).astype(pool.dtype))
+        return flat.reshape(pool.shape)
+
+    k_pool = upd(k_pool, k)
+    v_pool = upd(v_pool, v)
+    out = ops.paged_verify_attention(q, k_pool, v_pool, tables, lengths,
+                                     scale=hd ** -0.5)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, {"k_pool": k_pool, "v_pool": v_pool, "block_tables": tables,
+                 "length": lengths + q_valid}
+
+
 # ---------------------------------------------------------------------------
 # MLA
 # ---------------------------------------------------------------------------

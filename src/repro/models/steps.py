@@ -101,6 +101,24 @@ def chunk_step(params, tokens, q_valid, caches, cfg: ModelConfig,
     return new_token, logits, caches
 
 
+def verify_step(params, tokens, q_valid, caches, cfg: ModelConfig,
+                rules=None, mesh=None):
+    """One speculative-verify step: tokens (b, s) holds a left-aligned feed
+    per row — the last committed token followed by its draft continuation —
+    with q_valid (b,) the per-row feed length (0 for rows sitting this pass
+    out). Returns (greedy (b, s), logits (b, s, V), caches): ``greedy[:, j]``
+    is the argmax after feed position j, bit-identical to what sequential
+    one-token decode would emit there, so the engine accepts the longest
+    prefix of draft tokens matching ``greedy[:, :-1]`` plus the bonus token.
+    ``caches`` must be the paged pool pytree with fork-grown tables covering
+    ``length + q_valid`` slots per live row."""
+    logits, caches, _ = tf.forward(params, cfg, tokens=tokens, mode="verify",
+                                   caches=caches, rules=rules, mesh=mesh,
+                                   q_valid=q_valid)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return greedy, logits, caches
+
+
 def init_train_state(cfg: ModelConfig, key):
     params, _ = tf.init_model(cfg, key)
     return {"params": params, "opt": init_opt_state(params)}

@@ -6,6 +6,8 @@ Forward modes:
   * "train"/"encode": full-sequence logits (b, s, vocab)
   * "prefill": last-position logits + initialized caches
   * "decode": one-token logits + updated caches (serve_step body)
+  * "chunk": chunked-prefill continuation over paged caches, last-valid logits
+  * "verify": speculative draft verification over paged caches, full logits
 """
 from __future__ import annotations
 
@@ -170,6 +172,11 @@ def _block_fwd(p, x, positions, cfg: ModelConfig, mode: str, cache, rules,
             raise NotImplementedError("chunked prefill supports gqa-family "
                                       "attention only (paged KV)")
         a, new_cache = attn.gqa_prefill_paged(p["attn"], h, cfg, cache, q_valid)
+    elif mode == "verify":
+        if cfg.attn_type == "mla":
+            raise NotImplementedError("speculative verify supports gqa-family "
+                                      "attention only (paged KV)")
+        a, new_cache = attn.gqa_verify_paged(p["attn"], h, cfg, cache, q_valid)
     else:
         if cfg.attn_type == "mla":
             a, new_cache = attn.mla_prefill(p["attn"], h, positions, cfg,
@@ -262,6 +269,14 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     taken at each row's LAST VALID chunk position (the whole-prefill
     analogue of "last position"); rows with ``q_valid == 0`` produce
     garbage logits the caller ignores.
+
+    mode="verify" is the speculative draft-and-verify pass: like "chunk" the
+    ``tokens`` row is a left-aligned continuation (last committed token +
+    draft tokens, ``q_valid`` valid per row) written through the paged
+    cache, but the logits come back UN-sliced — ``(b, s, vocab)`` — because
+    acceptance needs the argmax at *every* draft position, and position j's
+    logits are bit-identical to what sequential one-token decode would
+    produce there.
     """
     compute = jnp.dtype(cfg.compute_dtype)
     if embeds is not None:
@@ -271,7 +286,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
         x = params["embed"].astype(compute)[tokens]
         x = x * jnp.asarray(cfg.d_model ** 0.5, compute)
         b, s = tokens.shape
-    if mode in ("decode", "chunk"):
+    if mode in ("decode", "chunk", "verify"):
         positions = None  # per-request positions come from cache lengths
     else:
         positions = jnp.arange(s, dtype=jnp.int32)[None, :]

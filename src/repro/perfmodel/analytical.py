@@ -163,22 +163,49 @@ def kv_swap_cost(nbytes: float, tier: CacheTierSpec,
     return StageCost(t, idle_stall_energy(t, cluster), 0.0, nbytes, "network")
 
 
+def expected_accepted_tokens(k: int, alpha) -> float:
+    """Expected tokens committed per speculative step (draft k, verify once,
+    always >= 1 thanks to the bonus token).
+
+    ``alpha`` is either a scalar (i.i.d. per-position acceptance — the
+    classic geometric closed form ``(1 - alpha^(k+1)) / (1 - alpha)``) or a
+    per-position sequence of CONDITIONAL rates ``[a_0, .., a_{k-1}]`` with
+    ``a_i = P(accept position i | accepted 0..i-1)``, as measured by the
+    engine (``spec_stats()['conditional_acceptance_per_position']`` — NOT
+    the marginal ``acceptance_per_position``, which is already a cumulative
+    product): acceptance stops at the first rejection, so
+    E[tokens] = 1 + sum_j prod_{i<=j} a_i. A sequence longer than ``k`` is
+    truncated; shorter ones extend with their last value (rates flatten past
+    the measured horizon)."""
+    if isinstance(alpha, (int, float)):
+        a = float(alpha)
+        return float(k + 1) if a >= 1 else (1 - a ** (k + 1)) / (1 - a)
+    rates = [float(a) for a in alpha][:k]
+    if rates and len(rates) < k:
+        rates.extend([rates[-1]] * (k - len(rates)))
+    total, run = 1.0, 1.0
+    for a in rates:
+        run *= a
+        total += run
+    return total
+
+
 def speculative_decode_step(target: ModelConfig, draft: ModelConfig,
                             cluster: ClusterSpec, batch: int, avg_context: int,
-                            k: int = 4, alpha: float = 0.8):
+                            k: int = 4, alpha=0.8):
     """Speculative decoding (paper §III-E1's optimization list): draft k
     tokens with the small model, verify in one target pass.
 
-    Returns (StageCost for one spec step, expected accepted tokens/step =
-    (1 - alpha^(k+1)) / (1 - alpha) under i.i.d. acceptance).
-    """
+    Returns (StageCost for one spec step, expected accepted tokens/step).
+    ``alpha`` may be a scalar (geometric acceptance) or a measured
+    per-position distribution — see ``expected_accepted_tokens``."""
     draft_cost = decode_step_time(draft, cluster, batch, avg_context)
     # verification: target forward over k+1 positions per request ~ a tiny
     # chunked prefill (weights read once, k+1 tokens of compute)
     verify = prefill_time(target, cluster, k + 1, batch,
                           past_tokens=avg_context)
     t = draft_cost.time * k + verify.time
-    expected = (1 - alpha ** (k + 1)) / (1 - alpha) if alpha < 1 else k + 1
+    expected = expected_accepted_tokens(k, alpha)
     cost = StageCost(t, draft_cost.energy * k + verify.energy,
                      draft_cost.flops * k + verify.flops,
                      draft_cost.bytes * k + verify.bytes, verify.bound)

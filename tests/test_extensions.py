@@ -9,7 +9,6 @@ import pytest
 from repro.configs import get_config, get_reduced_config
 from repro.core import SystemSpec, WorkloadConfig, build_system, generate
 from repro.core.llm_scheduler import SchedulerLimits
-from repro.core.system import _guard_model_2b
 from repro.core.workload import AZURE_CODE
 from repro.perfmodel import analytical as ana
 from repro.perfmodel.hardware import ClusterSpec, H100
@@ -17,7 +16,7 @@ from repro.perfmodel.hardware import ClusterSpec, H100
 
 def test_spec_decode_speedup_monotone_in_alpha():
     target = get_config("llama3_70b")
-    draft = _guard_model_2b()
+    draft = get_config("guard_2b")
     cluster = ClusterSpec(H100, 2, 2)
     base = ana.decode_step_time(target, cluster, 16, 2048).time
     prev = 0.0
@@ -32,7 +31,7 @@ def test_spec_decode_speedup_monotone_in_alpha():
 
 def test_spec_decode_expected_tokens_formula():
     target = get_config("llama3_70b")
-    draft = _guard_model_2b()
+    draft = get_config("guard_2b")
     cluster = ClusterSpec(H100, 2, 2)
     _, acc = ana.speculative_decode_step(target, draft, cluster, 8, 1024,
                                          k=3, alpha=0.5)
