@@ -1,0 +1,255 @@
+"""Fleet-scale simulator benchmark: what a 1000-client sweep point costs.
+
+ROADMAP item 4 wants 100s-1000s of clients; the blocker was the event loop's
+per-request linear scans (candidate rebuild, O(N) load ``min()``, per-client
+radix probes). This benchmark drives a diurnal-surge trace with scheduled
+CLIENT_ADD/CLIENT_REMOVE churn through fleets of 10..1000 clients and
+measures the *simulator*: wall-clock for ``Coordinator.run()``,
+``simulator_stats`` event counts, modeled throughput and per-tier goodput.
+Each fleet size runs both arms — ``fleet_index=True`` (incremental indexes,
+the default) and ``fleet_index=False`` (linear-scan baseline) — and the two
+must produce bit-identical ``MetricsCollector.summary()`` dicts: the indexes
+are a pure simulator-cost optimization, never a behavior change.
+
+The request count is FIXED across fleet sizes, so wall-clock growth isolates
+per-request dispatch cost: a linear scan grows ~10x from 100 to 1000
+clients, the indexed path must stay well below that.
+
+Emits ``BENCH_fleet_scale.json`` next to this file. ``--smoke`` runs the
+pinned CI pair (100 and 1000 clients); with ``--check`` it exits non-zero
+when any summary diverges between arms, when the smoke event count blows a
+2x budget, or when the indexed 1000-vs-100 wall-clock ratio exceeds the
+hard sublinearity bound (an advisory warning fires earlier).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+if __package__ in (None, ""):                      # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import row
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.client import LLMClient
+from repro.core.llm_scheduler import SchedulerLimits
+from repro.core.metrics import SLO, simulator_stats
+from repro.core.workload import synthetic_trace
+
+FLEETS = (10, 50, 100, 250, 500, 1000)
+SMOKE_FLEETS = (100, 1000)
+N_REQUESTS = 600                # fixed across fleet sizes (see module doc)
+SMOKE_REQUESTS = 400
+OUT_TOKENS = 96                 # short decodes: the benchmark stresses
+RATE = 150.0                    # routing, not decode simulation
+SURGE_AT = 1.5                  # diurnal surge: arrivals after this come 3x
+SURGE_RAMP = 3.0                # faster (deterministic time compression)
+
+# SLO tiers: interactive chat vs batch/code, looser targets for batch
+TIER_SLOS = {"interactive": SLO(),
+             "batch": SLO(ttft_base=2.0, tpot_base=0.100)}
+
+# pinned CI budgets for the 1000-client smoke arm (indexed). Events are
+# deterministic: fail hard at 2x. Wall-clock ratios on shared runners are
+# noisy: warn at the advisory bound, fail only past the hard one (a linear
+# scan measures ~10x here, so 6x still separates the regimes cleanly).
+SMOKE_EVENTS_PINNED = 12_000
+WALL_RATIO_WARN = 3.0
+WALL_RATIO_HARD = 6.0
+EVENTS_RATIO_HARD = 2.0
+
+
+def _history_limits() -> SchedulerLimits:
+    # ring-buffer step history: a 1000-client run must not hold every step
+    # dict in memory (step_events stays exact via the counter)
+    return SchedulerLimits(max_batch=32, history_limit=64)
+
+
+def _workload(n_requests: int) -> List:
+    """Two-tier diurnal trace: interactive chat plus heavier batch/code
+    requests, interleaved by arrival, surging 3x at SURGE_AT."""
+    inter = synthetic_trace(input_mean=256, input_std=0.4,
+                            output_mean=OUT_TOKENS, output_std=0.2,
+                            name="interactive")
+    batch = synthetic_trace(input_mean=1024, input_std=0.5,
+                            output_mean=OUT_TOKENS * 2, output_std=0.2,
+                            name="batch")
+    n_inter = (2 * n_requests) // 3
+    reqs = generate(WorkloadConfig(
+        trace=inter, rate=RATE, n_requests=n_inter, process="poisson",
+        postprocess=False, seed=11, shared_prefix_pool=8,
+        shared_prefix_tokens=256, rate_ramp_at=SURGE_AT,
+        rate_ramp=SURGE_RAMP))
+    for r in reqs:
+        r.tier = "interactive"
+    breqs = generate(WorkloadConfig(
+        trace=batch, rate=RATE / 2, n_requests=n_requests - n_inter,
+        process="poisson", postprocess=False, seed=12,
+        rate_ramp_at=SURGE_AT, rate_ramp=SURGE_RAMP))
+    for r in breqs:
+        r.tier = "batch"
+    return reqs + breqs
+
+
+def _schedule_churn(coord) -> None:
+    """Deterministic churn, identical in both arms: two replicas scale out
+    at the surge, one drains back in later, one client fails and recovers."""
+    base = coord.clients["llm0"]
+    sched = base.scheduler
+    for i in range(2):
+        spare = LLMClient(f"spare{i}", base.cluster, base.model_cfg,
+                          "continuous", sched.limits, perf=sched.perf)
+        coord.schedule_add_client(spare, SURGE_AT + 0.1 * (i + 1))
+    coord.schedule_remove_client("spare1", SURGE_AT + 4.0)
+    coord.schedule_failure("llm1", SURGE_AT + 0.5,
+                           recover_at=SURGE_AT + 2.5)
+
+
+def _run_arm(n_clients: int, n_requests: int,
+             indexed: bool) -> Tuple[Dict, Dict, Dict, float]:
+    spec = SystemSpec(n_llm_clients=n_clients, strategy="continuous",
+                      router_policy="load_based", router_metric="queue",
+                      limits=_history_limits(), with_pre_post=False,
+                      fleet_index=indexed)
+    coord = build_system(spec)
+    coord.submit(_workload(n_requests))
+    _schedule_churn(coord)
+    t0 = time.perf_counter()
+    metrics = coord.run()
+    wall = time.perf_counter() - t0
+    horizon = max((r.completion_time or 0.0)
+                  for r in metrics.serviced) if metrics.serviced else 1.0
+    summary = metrics.summary(horizon=horizon, slo=SLO())
+    tiers = metrics.goodput_by_tier(TIER_SLOS, horizon)
+    return summary, tiers, simulator_stats(coord), wall
+
+
+def _summaries_equal(a: Dict, b: Dict) -> bool:
+    if set(a) != set(b):
+        return False
+    for k in a:
+        x, y = a[k], b[k]
+        if x == y:
+            continue
+        if isinstance(x, float) and isinstance(y, float) \
+                and math.isnan(x) and math.isnan(y):
+            continue
+        return False
+    return True
+
+
+def _bench_fleet(n_clients: int, n_requests: int) -> Dict:
+    s_idx, tiers_idx, st_idx, wall_idx = _run_arm(n_clients, n_requests, True)
+    s_scan, tiers_scan, st_scan, wall_scan = _run_arm(n_clients, n_requests,
+                                                      False)
+    return {
+        "fleet": n_clients,
+        "n_requests": n_requests,
+        "wall_s_indexed": wall_idx,
+        "wall_s_scan": wall_scan,
+        "speedup": wall_scan / max(wall_idx, 1e-9),
+        "events_popped": st_idx["events_popped"],
+        "events_popped_scan": st_scan["events_popped"],
+        "micro_steps": st_idx["micro_steps"],
+        "step_events": st_idx["step_events"],
+        "throughput_tok_s": s_idx["throughput_tok_s"],
+        "goodput_tok_s": s_idx["goodput_tok_s"],
+        "goodput_by_tier": tiers_idx,
+        "summary_match": (_summaries_equal(s_idx, s_scan)
+                          and tiers_idx == tiers_scan),
+    }
+
+
+def _write_json(results: List[Dict], smoke: bool) -> str:
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_fleet_scale.json")
+    small = min(r["fleet"] for r in results)
+    big = max(r["fleet"] for r in results)
+    by = {r["fleet"]: r for r in results}
+    with open(path, "w") as f:
+        json.dump({
+            "scenario": "two-tier diurnal surge + churn, fixed 600-request "
+                        "schedule, load_based(queue) routing",
+            "smoke": smoke,
+            "pinned_smoke_events": SMOKE_EVENTS_PINNED,
+            "wall_ratio_big_vs_small":
+                by[big]["wall_s_indexed"] / max(by[small]["wall_s_indexed"],
+                                                1e-9),
+            "events_ratio_big_vs_small":
+                by[big]["events_popped"] / max(by[small]["events_popped"], 1),
+            "fleet_ratio": big / small,
+            "results": results,
+        }, f, indent=1)
+    return path
+
+
+def run(smoke: bool = False) -> List[str]:
+    out = []
+    fleets = SMOKE_FLEETS if smoke else FLEETS
+    n_requests = SMOKE_REQUESTS if smoke else N_REQUESTS
+    results = []
+    for fleet in fleets:
+        t0 = time.perf_counter()
+        r = _bench_fleet(fleet, n_requests)
+        results.append(r)
+        us = (time.perf_counter() - t0) * 1e6
+        tiers = " ".join(f"{t}={v:.0f}" for t, v in
+                         sorted(r["goodput_by_tier"].items()))
+        out.append(row(
+            f"fleet{fleet}{'_smoke' if smoke else ''}", us,
+            f"wall={r['wall_s_indexed']:.2f}s/{r['wall_s_scan']:.2f}s "
+            f"speedup={r['speedup']:.1f}x events={r['events_popped']} "
+            f"goodput[{tiers}] match={r['summary_match']}"))
+    path = _write_json(results, smoke)
+    out.append(row("fleet_json", 0.0, f"wrote {path} ({len(results)} points)"))
+    return out
+
+
+def check(results_path: str) -> int:
+    """CI gate: summary divergence and event budgets/ratios fail hard (both
+    deterministic); the wall-clock sublinearity ratio warns at the advisory
+    bound and fails only past the hard one (timing on shared runners)."""
+    with open(results_path) as f:
+        data = json.load(f)
+    errors = []
+    smoke = bool(data.get("smoke"))
+    for r in data["results"]:
+        if not r["summary_match"]:
+            errors.append(f"fleet {r['fleet']}: indexed and scan arms "
+                          f"disagree on MetricsCollector.summary()")
+        if smoke and r["fleet"] == max(SMOKE_FLEETS) \
+                and r["events_popped"] > 2 * SMOKE_EVENTS_PINNED:
+            errors.append(f"fleet {r['fleet']}: events popped "
+                          f"{r['events_popped']} > 2x pinned budget "
+                          f"{SMOKE_EVENTS_PINNED}")
+    ev_ratio = data.get("events_ratio_big_vs_small", 1.0)
+    if ev_ratio > EVENTS_RATIO_HARD:
+        errors.append(f"event count grows {ev_ratio:.2f}x from the small to "
+                      f"the big fleet on a fixed request schedule "
+                      f"(> {EVENTS_RATIO_HARD}x)")
+    wall_ratio = data.get("wall_ratio_big_vs_small", 1.0)
+    if wall_ratio > WALL_RATIO_HARD:
+        errors.append(f"indexed wall-clock grows {wall_ratio:.2f}x from the "
+                      f"small to the big fleet (> {WALL_RATIO_HARD}x hard "
+                      f"bound; linear scan measures ~{data['fleet_ratio']:.0f}x)")
+    elif wall_ratio > WALL_RATIO_WARN:
+        print(f"CHECK WARNING: indexed wall-clock ratio {wall_ratio:.2f}x "
+              f"above advisory bound {WALL_RATIO_WARN}x", file=sys.stderr)
+    for e in errors:
+        print(f"CHECK FAILED: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+    if "--check" in sys.argv:
+        json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "BENCH_fleet_scale.json")
+        raise SystemExit(check(json_path))

@@ -24,6 +24,7 @@ MODULES = [
     "spec_decode",       # SIII-E1 spec decode: engine + analytical + sim
     "kernel_bench",      # kernel rooflines
     "sim_throughput",    # simulator cost: decode fast-forward on vs off
+    "fleet_scale",       # simulator cost: indexed routing at 10..1000 clients
 ]
 
 

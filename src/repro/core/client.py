@@ -71,6 +71,12 @@ class Client:
         Base clients plan atomic steps only, so there is nothing to cut."""
         return None
 
+    def requeue_step(self, step) -> None:
+        """Return the requests of a discarded in-flight step to the queue
+        (client fail/remove) so the subsequent ``drain()`` re-dispatches
+        them instead of losing them."""
+        self.scheduler.requeue_step(step)
+
     def drain(self) -> List[rq.Request]:
         return self.scheduler.drain()
 

@@ -14,6 +14,7 @@ from repro.core import events as ev
 from repro.core import request as rq
 from repro.core.client import Client, LLMClient
 from repro.core.comm import Network
+from repro.core.fleet import FleetIndex, StageMembers
 from repro.core.metrics import SLO, MetricsCollector
 from repro.core.router import Router, RoundRobinRouter
 
@@ -31,6 +32,11 @@ class CoordinatorConfig:
     migration_granularity: Optional[str] = None  # default: kv_transfer_gran.
     warm_on_scale_out: bool = True     # push-mode warming on ADD / RECOVER
     warm_max_blocks: int = 256         # donor block budget per warming push
+    # fleet-scale routing indexes (src/repro/core/fleet.py): incremental
+    # stage->client / load / root-hash structures replacing the per-request
+    # linear scans. Decision-identical to the scan baseline by contract;
+    # False keeps the baseline path (the A/B arm the identity checks use).
+    fleet_index: bool = True
 
 
 class Coordinator:
@@ -51,6 +57,8 @@ class Coordinator:
         # in-flight prefix migrations, keyed (dst, chain): dedup so a burst
         # of same-prefix routing decisions starts one transfer, not many
         self._migrations_inflight: set = set()
+        self.fleet: Optional[FleetIndex] = \
+            FleetIndex(self) if self.cfg.fleet_index else None
         self.router.bind(self)
         # times of pending *external* events (everything but step completions)
         # — the fast-forward planner stops windows at the next one so the
@@ -93,6 +101,8 @@ class Coordinator:
 
     def _candidates(self, req: rq.Request) -> Optional[List[Client]]:
         stage = req.current_stage.kind
+        if self.fleet is not None:
+            return self._candidates_indexed(req, stage)
         cands = [c for c in self.clients.values()
                  if stage in c.stages and not c.failed]
         if not cands and stage in self._OPTIONAL_STAGES:
@@ -110,6 +120,27 @@ class Coordinator:
         if not cands:
             raise RuntimeError(f"no live client serves stage '{stage}'")
         return cands
+
+    def _candidates_indexed(self, req: rq.Request,
+                            stage: str) -> Optional[StageMembers]:
+        """Index-backed twin of the linear scan above: same None / raise
+        semantics, same candidate iteration order, same group-filter
+        fallback (an empty group view falls back to the stage view)."""
+        view = self.fleet.candidates(stage)
+        if view is None or not view:
+            if stage in self._OPTIONAL_STAGES:
+                return None
+            raise RuntimeError(f"no live client serves stage '{stage}'")
+        if stage == rq.DECODE and self.cfg.disaggregation == "local":
+            prev = next((s.client for s in reversed(req.stages[:req.stage_idx])
+                         if s.kind == rq.PREFILL and s.client), None)
+            if prev is not None:
+                g = getattr(self.clients.get(prev), "group", None)
+                if g is not None:
+                    gview = self.fleet.group_candidates(stage, g)
+                    if gview:
+                        view = gview
+        return view
 
     def _complete(self, req: rq.Request):
         """Terminal bookkeeping: straggler dispatch-time entries die with the
@@ -147,15 +178,30 @@ class Coordinator:
         self._arm_straggler(req, now)
         self._interrupt(client.name, now)  # arrival lands mid-window
         client.add(req)
+        self._touch(client.name)
         self._kick(client, now)
+
+    def _touch(self, name: str):
+        """Dirty-mark a client whose scheduler/allocator state this event
+        mutated: its cached load-index values are stale. Every chokepoint
+        where the coordinator reaches into a client calls this — missing one
+        breaks the decision-identity contract (and is what the churn
+        hypothesis test in tests/test_fleet_scale.py hunts for)."""
+        if self.fleet is not None:
+            self.fleet.touch(name)
 
     def _kick(self, client: Client, now: float):
         if client.failed or client.name in self._active_step:
             return
         step = client.plan_step(now, self._ff_horizon(now))
+        # plan_step itself mutates load-bearing state (admission, swap-ins,
+        # preemption) even when it ends up planning nothing
+        self._touch(client.name)
         if step is None:
             return
         self._active_step[client.name] = step
+        if self.fleet is not None and getattr(step, "n_steps", 1) > 1:
+            self.fleet.set_windowed(client.name, True)
         end = getattr(step, "end_time", None)
         self.queue.push(end if end is not None else now + step.duration,
                         ev.CLIENT_STEP_DONE, (client.name, step))
@@ -176,6 +222,9 @@ class Coordinator:
         if client is None:
             return
         del self._active_step[name]
+        if self.fleet is not None:
+            self.fleet.set_windowed(name, False)
+            self.fleet.touch(name)         # truncation commits window state
         rem = client.truncate_step(step, now, inclusive)
         if rem is not None and reschedule:
             self._active_step[name] = rem
@@ -195,6 +244,11 @@ class Coordinator:
         caller, before the request is enqueued)."""
         if getattr(self.router, "metric", None) not in self._KV_EXACT_METRICS:
             return
+        if isinstance(clients, StageMembers):
+            # only windowed candidates need cutting — _interrupt is a no-op
+            # (and pushes no event) for everyone else, so skipping them
+            # pushes the exact event sequence the baseline loop would
+            clients = clients.windowed()
         for c in clients:
             self._interrupt(c.name, now)
 
@@ -366,6 +420,7 @@ class Coordinator:
             self._migrations_inflight.discard(key)
             return
         handle, n_resident, nbytes = export
+        self._touch(src_name)              # export pins bump refcounts
         gran = self.cfg.migration_granularity \
             or self.cfg.kv_transfer_granularity
         n_layers = src.model_cfg.num_layers if isinstance(src, LLMClient) else 1
@@ -387,6 +442,7 @@ class Coordinator:
         src_kv = self._kv_of(src) if src is not None else None
         if src_kv is not None:
             src_kv.release_export(handle)
+            self._touch(src_name)
         dst = self.clients.get(dst_name)
         dst_kv = self._kv_of(dst) if dst is not None else None
         if dst is None or dst.failed or dst_kv is None:
@@ -395,6 +451,7 @@ class Coordinator:
         # so the window's free-list reservation stays exact
         self._interrupt(dst_name, now)
         dst_kv.import_chain(list(chain))
+        self._touch(dst_name)
         self.metrics.kv_migrations += 1
         self.metrics.kv_migrated_bytes += nbytes
 
@@ -420,6 +477,7 @@ class Coordinator:
                 else:
                     self._interrupt(dst, now)  # arrival lands mid-window
                     client.add(req)
+                    self._touch(dst)
                     self._kick(client, now)
 
             elif kind == ev.CLIENT_STEP_DONE:
@@ -428,8 +486,11 @@ class Coordinator:
                 if client is None or self._active_step.get(name) is not step:
                     continue  # stale (failed/removed client)
                 del self._active_step[name]
+                if self.fleet is not None:
+                    self.fleet.set_windowed(name, False)
                 if client.failed:
                     continue
+                self._touch(name)
                 finished = client.finish_step(step, now)
                 self._account_swap_traffic(client, step, now)
                 for req in finished:
@@ -446,13 +507,18 @@ class Coordinator:
             elif kind == ev.CLIENT_RECOVER:
                 c = self.clients.get(event.payload)
                 if c is not None:
+                    was_failed = c.failed
                     c.failed = False
+                    if self.fleet is not None and was_failed:
+                        self.fleet.set_failed(c.name, False)
                     self._warm_client(c, now)  # its device KV died with it
                     self._kick(c, now)
 
             elif kind == ev.CLIENT_ADD:
                 c: Client = event.payload
                 self.clients[c.name] = c
+                if self.fleet is not None:
+                    self.fleet.add(c)
                 self._warm_client(c, now)      # scaled-out replica is cold
                 self._kick(c, now)
 
@@ -487,8 +553,17 @@ class Coordinator:
         # tokens from already-finished window iterations were streamed to the
         # user; commit them before the in-flight (remainder) step is lost
         self._interrupt(name, now, reschedule=False)
+        was_failed = client.failed
         client.failed = True
-        self._active_step.pop(name, None)      # in-flight step is lost
+        if self.fleet is not None and not was_failed:
+            self.fleet.set_failed(name, True)
+        step = self._active_step.pop(name, None)   # in-flight step is lost
+        if step is not None:
+            # ... but its admitted-not-finished prefills must not be: put
+            # them back in the queue so the drain below re-dispatches them
+            client.requeue_step(step)
+        if self.fleet is not None:
+            self.fleet.set_windowed(name, False)
         for req in client.drain():             # checkpoint/restart semantics:
             # the stage restarts on another client; decoded tokens already
             # streamed to the user are kept.
@@ -501,8 +576,13 @@ class Coordinator:
         if client is None:
             return
         self.metrics.retire_client_kv(client)
-        self._active_step.pop(name, None)
-        for req in client.drain():
+        step = self._active_step.pop(name, None)
+        if step is not None:
+            client.requeue_step(step)
+        drained = client.drain()
+        if self.fleet is not None:
+            self.fleet.remove(name, client)
+        for req in drained:
             self._dispatch(req, now)
 
     def _check_straggler(self, req: rq.Request, armed_at: float, now: float):
@@ -542,6 +622,7 @@ class Coordinator:
             sched.remove_waiting(req)     # frees any pages it held
         else:
             waiting.remove(req)
+        self._touch(client.name)
         req.preemptions += 1
         self._dispatch(req, now)
 

@@ -80,6 +80,11 @@ class SchedulerLimits:
     spec_k: int = 0
     spec_draft: str = "guard_2b"
     spec_acceptance: object = 0.8      # float | Sequence[float]
+    # per-step history retention: None keeps every step dict (seed behavior,
+    # fine for small fleets), 0 disables recording entirely, n > 0 keeps a
+    # ring buffer of the last n steps. ``step_events`` stays a monotonic
+    # counter either way, so ``simulator_stats`` is retention-independent.
+    history_limit: Optional[int] = None
 
 
 @dataclass
@@ -349,8 +354,14 @@ class LLMScheduler:
         # re-fetched (a decode replica cannot re-run prefill), priced on
         # re-admission like a swap-in from the first spill tier
         self._needs_refetch: set = set()
-        # scheduler-level metrics (paper §III-F2)
-        self.history: List[Dict] = []
+        # scheduler-level metrics (paper §III-F2). history_limit bounds the
+        # per-step dicts held in memory (None = keep all, 0 = record none,
+        # n = ring of last n); step_events counts appends regardless so
+        # simulator_stats stays exact at 1000-client scale.
+        hl = limits.history_limit
+        self.history = ([] if hl is None
+                        else deque(maxlen=hl if hl > 0 else 0))
+        self.step_events = 0
         self.total_energy = 0.0
         self.total_tokens = 0
         # simulator-cost accounting: engine iterations actually simulated
@@ -894,6 +905,7 @@ class LLMScheduler:
                 self._release_kv(r)
             self.static_batch = []
         self.micro_steps += j
+        self.step_events += 1
         self.history.append({
             "time": times[-1], "queue": len(self.waiting),
             "running": len(self.running), "swapped": len(self.swapped),
@@ -996,6 +1008,7 @@ class LLMScheduler:
                 self._release_kv(r)
             self.static_batch = []
         self.micro_steps += 1
+        self.step_events += 1
         self.history.append({
             "time": now, "queue": len(self.waiting), "running": len(self.running),
             "swapped": len(self.swapped), "mem_used": self.kv.used,
@@ -1005,6 +1018,19 @@ class LLMScheduler:
         return finished
 
     # --- fault tolerance ------------------------------------------------
+    def requeue_step(self, step: LLMStep) -> None:
+        """An in-flight step is being discarded unfinished (client fail or
+        removal). Prefill admission pops requests out of ``waiting`` while
+        they only enter ``running`` at ``finish_step`` — inside a discarded
+        step they are invisible to ``drain()`` and would be lost outright
+        (a straggler deadline then re-arms for them forever). Put them back
+        first. Decode members are still in ``running`` and static batches
+        in ``static_batch``, both already drain-visible."""
+        for r, _ in step.prefill:
+            if (r not in self.waiting and r not in self.running
+                    and r not in self.static_batch):
+                self.waiting.requeue(r)
+
     def drain(self) -> List[Request]:
         """Client failure: return every in-flight request for re-dispatch.
         KV state is lost; prefill restarts (paper-scale systems re-prefill)."""

@@ -68,7 +68,7 @@ import heapq
 import itertools
 from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -154,9 +154,10 @@ class BlockTable:
 # ---------------------------------------------------------------------------
 
 class _RadixNode:
-    __slots__ = ("hash", "block", "parent", "children")
+    __slots__ = ("hash", "block", "parent", "children", "is_root")
 
-    def __init__(self, h: int, block: int, parent: Optional["_RadixNode"]):
+    def __init__(self, h: int, block: int, parent: Optional["_RadixNode"],
+                 is_root: bool = False):
         self.hash = h
         self.block = block
         # direct object links, never hashes: a chain hash can resurface as a
@@ -164,6 +165,11 @@ class _RadixNode:
         # would then corrupt the recreated node's child count
         self.parent = parent
         self.children: Dict[int, "_RadixNode"] = {}
+        # registered with parent_hash=None, i.e. a chain's first block — the
+        # key the fleet-level prefix inverted index tracks. Distinct from
+        # ``parent is None``: a node whose parent hash was simply absent at
+        # insert (resurfaced interior) is NOT a root.
+        self.is_root = is_root
 
 
 class RadixBlockIndex:
@@ -186,6 +192,10 @@ class RadixBlockIndex:
         self._cached: Dict[int, int] = {}        # rc-0 resident block -> seq
         self._leaf_heap: List[Tuple[int, int]] = []   # (seq, block) candidates
         self._seq = itertools.count()
+        # fleet-index hook: called with (hash, added) when a chain-ROOT node
+        # registers/unregisters, so a fleet-level hash->clients inverted
+        # index can track which clients could serve a prefix hit
+        self.on_root_change: Optional[Callable[[int, bool], None]] = None
 
     # -- lookup ------------------------------------------------------------
     def match(self, chain: Sequence[int]) -> List[int]:
@@ -206,11 +216,13 @@ class RadixBlockIndex:
         if h in self.nodes:
             return False
         parent = self.nodes.get(parent_hash) if parent_hash is not None else None
-        node = _RadixNode(h, block, parent)
+        node = _RadixNode(h, block, parent, is_root=parent_hash is None)
         self.nodes[h] = node
         self.by_block[block] = h
         if parent is not None:
             parent.children[h] = node
+        if node.is_root and self.on_root_change is not None:
+            self.on_root_change(h, True)
         return True
 
     def holds_block(self, block: int) -> bool:
@@ -227,6 +239,8 @@ class RadixBlockIndex:
             return
         node = self.nodes.pop(h)
         self._cached.pop(block, None)
+        if node.is_root and self.on_root_change is not None:
+            self.on_root_change(h, False)
         parent = node.parent
         if parent is not None:
             parent.children.pop(h, None)

@@ -28,7 +28,12 @@ def simulator_stats(coord) -> Dict[str, float]:
         sched = c.scheduler
         out["micro_steps"] += getattr(sched, "micro_steps", 0)
         out["macro_windows"] += getattr(sched, "macro_windows", 0)
-        out["step_events"] += len(getattr(sched, "history", ()))
+        # prefer the monotonic counter: with SchedulerLimits.history_limit
+        # the history deque drops old entries (or is disabled outright), so
+        # its length undercounts; the counter survives either way
+        se = getattr(sched, "step_events", None)
+        out["step_events"] += (se if se is not None
+                               else len(getattr(sched, "history", ())))
     return out
 
 
@@ -88,6 +93,12 @@ class MetricsCollector:
                  "migration_refused_blocks": 0, "migration_hit_tokens": 0}
         self.kv: Dict[str, float] = dict(_zero)
         self._kv_retired: Dict[str, float] = dict(_zero)
+        # latency arrays memoized on len(serviced): requests are terminal
+        # once complete() sees them, and serviced is append-only, so the
+        # count is a sufficient cache key. One O(R) pass serves the ~8
+        # property reads a summary() used to pay separately for.
+        self._lat_key: int = -1
+        self._lat: tuple = ([], [], [])
 
     def complete(self, req: Request):
         self.serviced.append(req)
@@ -128,18 +139,34 @@ class MetricsCollector:
         self.kv = totals
 
     # ------------------------------------------------------------------
+    def _latency_arrays(self) -> tuple:
+        """(ttfts, tpots, e2es) in one pass over ``serviced``, cached."""
+        if self._lat_key != len(self.serviced):
+            ttfts: List[float] = []
+            tpots: List[float] = []
+            e2es: List[float] = []
+            for r in self.serviced:
+                if r.ttft is not None:
+                    ttfts.append(r.ttft)
+                if r.tpot is not None and r.decoded_tokens > 1:
+                    tpots.append(r.tpot)
+                if r.e2e is not None:
+                    e2es.append(r.e2e)
+            self._lat = (ttfts, tpots, e2es)
+            self._lat_key = len(self.serviced)
+        return self._lat
+
     @property
     def ttfts(self) -> List[float]:
-        return [r.ttft for r in self.serviced if r.ttft is not None]
+        return self._latency_arrays()[0]
 
     @property
     def tpots(self) -> List[float]:
-        return [r.tpot for r in self.serviced
-                if r.tpot is not None and r.decoded_tokens > 1]
+        return self._latency_arrays()[1]
 
     @property
     def e2es(self) -> List[float]:
-        return [r.e2e for r in self.serviced if r.e2e is not None]
+        return self._latency_arrays()[2]
 
     def total_tokens(self) -> int:
         return sum(r.decoded_tokens * r.branches for r in self.serviced)
@@ -149,28 +176,60 @@ class MetricsCollector:
 
     def goodput(self, slo: SLO, horizon: float) -> float:
         """Tokens/sec from requests individually meeting TTFT-P50&TPOT-P50."""
-        ok = [r for r in self.serviced
-              if (r.ttft or 1e9) <= slo.ttft_base * slo.ttft_mult[50]
-              and (r.tpot if r.tpot is not None else 0.0)
-              <= slo.tpot_base * slo.tpot_mult[50]]
-        return sum(r.decoded_tokens * r.branches for r in ok) / max(horizon, 1e-9)
+        tok = 0
+        ttft_cap = slo.ttft_base * slo.ttft_mult[50]
+        tpot_cap = slo.tpot_base * slo.tpot_mult[50]
+        for r in self.serviced:
+            if ((r.ttft or 1e9) <= ttft_cap
+                    and (r.tpot if r.tpot is not None else 0.0) <= tpot_cap):
+                tok += r.decoded_tokens * r.branches
+        return tok / max(horizon, 1e-9)
+
+    def goodput_by_tier(self, slos, horizon: float) -> Dict[str, float]:
+        """Per-tier goodput: ``slos`` is either one SLO applied to every
+        observed ``Request.tier``, or a mapping tier -> SLO (tiers without an
+        entry fall back to the mapping's ``"default"`` key, else are skipped).
+        One pass over ``serviced``; tiers with no serviced requests do not
+        appear."""
+        caps: Dict[str, tuple] = {}
+        tok: Dict[str, int] = {}
+        for r in self.serviced:
+            tier = getattr(r, "tier", "default")
+            if tier not in caps:
+                slo = (slos if isinstance(slos, SLO)
+                       else slos.get(tier, slos.get("default")))
+                if slo is None:
+                    caps[tier] = None
+                else:
+                    caps[tier] = (slo.ttft_base * slo.ttft_mult[50],
+                                  slo.tpot_base * slo.tpot_mult[50])
+                tok[tier] = 0
+            if caps[tier] is None:
+                continue
+            ttft_cap, tpot_cap = caps[tier]
+            if ((r.ttft or 1e9) <= ttft_cap
+                    and (r.tpot if r.tpot is not None else 0.0) <= tpot_cap):
+                tok[tier] += r.decoded_tokens * r.branches
+        return {t: n / max(horizon, 1e-9)
+                for t, n in tok.items() if caps[t] is not None}
 
     def summary(self, horizon: Optional[float] = None,
                 total_energy: float = 0.0, slo: Optional[SLO] = None) -> Dict:
-        horizon = horizon or (max(self.e2es, default=0.0) + 1e-9)
+        ttfts, tpots, e2es = self._latency_arrays()
+        horizon = horizon or (max(e2es, default=0.0) + 1e-9)
         s = {
             "n_serviced": len(self.serviced),
             "n_dropped": len(self.dropped),
             "tokens": self.total_tokens(),
             "throughput_tok_s": self.throughput(horizon),
-            "ttft_mean": float(np.mean(self.ttfts)) if self.ttfts else float("nan"),
-            "tpot_mean": float(np.mean(self.tpots)) if self.tpots else float("nan"),
-            "e2e_mean": float(np.mean(self.e2es)) if self.e2es else float("nan"),
+            "ttft_mean": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "tpot_mean": float(np.mean(tpots)) if tpots else float("nan"),
+            "e2e_mean": float(np.mean(e2es)) if e2es else float("nan"),
         }
         for p in (50, 90, 99):
-            s[f"ttft_p{p}"] = percentile(self.ttfts, p)
-            s[f"tpot_p{p}"] = percentile(self.tpots, p)
-            s[f"e2e_p{p}"] = percentile(self.e2es, p)
+            s[f"ttft_p{p}"] = percentile(ttfts, p)
+            s[f"tpot_p{p}"] = percentile(tpots, p)
+            s[f"e2e_p{p}"] = percentile(e2es, p)
         if total_energy > 0:
             s["energy_j"] = total_energy
             s["tok_per_joule"] = s["tokens"] / total_energy

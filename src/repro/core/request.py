@@ -40,6 +40,7 @@ class Request:
     branches: int = 1                  # multi-path reasoning thought branches
     cached_tokens: int = 0             # KV tokens recovered by kv_retrieval
     rag_tokens: int = 0                # context tokens added by RAG
+    tier: str = "default"              # SLO tier (MetricsCollector.goodput_by_tier)
     # shared-prefix identity: ordered (content_id, n_tokens) segments covering
     # the *leading* part of the prompt (system prompt, reused RAG chunks, ...).
     # Two requests with equal leading segments share a block-aligned KV prefix

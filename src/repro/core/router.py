@@ -9,6 +9,7 @@ import itertools
 from typing import Dict, List, Optional
 
 from repro.core.client import Client
+from repro.core.fleet import StageMembers
 from repro.core.request import Request
 
 LOAD_METRICS = ("queue", "input_len", "output_len", "kv_size",
@@ -31,6 +32,12 @@ class Router:
 
 
 class RoundRobinRouter(Router):
+    """Round-robin over the *name-sorted* live candidates. Sorting pins the
+    assignment under client churn: the raw candidate list follows client-dict
+    order, which a CLIENT_ADD/REMOVE silently reshuffles mid-rotation (the
+    same determinism fix HeavyLightRouter got in PR 4). With a fleet index
+    the sorted order is maintained incrementally (O(1) pick per route)."""
+
     name = "round_robin"
 
     def __init__(self):
@@ -39,7 +46,11 @@ class RoundRobinRouter(Router):
     def route(self, req, candidates, now):
         key = req.current_stage.kind
         c = self._counters.setdefault(key, itertools.count())
-        return candidates[next(c) % len(candidates)]
+        k = next(c)
+        if isinstance(candidates, StageMembers):
+            return candidates.pick_sorted(k)
+        cands = sorted(candidates, key=lambda x: x.name)
+        return cands[k % len(cands)]
 
 
 class LoadBasedRouter(Router):
@@ -50,6 +61,8 @@ class LoadBasedRouter(Router):
         self.metric = metric
 
     def route(self, req, candidates, now):
+        if isinstance(candidates, StageMembers):
+            return candidates.load_best(self.metric, now)
         return min(candidates, key=lambda c: c.load(self.metric, now))
 
 
@@ -68,8 +81,14 @@ class HeavyLightRouter(Router):
     def route(self, req, candidates, now):
         # deterministic split: the candidate list follows client-dict order,
         # which a fail/recover/add silently reshuffles — partition a
-        # name-sorted view so the heavy pool is stable across churn
-        cands = sorted(candidates, key=lambda c: c.name)
+        # name-sorted view so the heavy pool is stable across churn. The
+        # fleet index maintains that view incrementally (no per-route sort);
+        # the per-pool min stays O(pool) — pools are load-ordered subsets a
+        # single heap cannot serve.
+        if isinstance(candidates, StageMembers):
+            cands = candidates.sorted_live()
+        else:
+            cands = sorted(candidates, key=lambda c: c.name)
         n_heavy = max(1, int(len(cands) * self.heavy_frac))
         heavy, light = cands[:n_heavy], cands[n_heavy:] or cands
         work = req.input_tokens + req.output_tokens * req.branches
@@ -104,15 +123,32 @@ class PrefixAffinityRouter(Router):
         self.fetch_load_factor = fetch_load_factor
 
     def route(self, req, candidates, now):
-        hits = {c.name: c.prefix_hit_tokens(req) for c in candidates}
-        best = max(hits.values())
-        if best < self.min_hit_tokens:
-            return min(candidates, key=lambda c: c.load(self.metric, now))
-        warm = [c for c in candidates if hits[c.name] == best]
+        if isinstance(candidates, StageMembers):
+            # fleet-level root-hash inverted index: only clients holding the
+            # chain's root block can have a nonzero hit, so exact hits are
+            # probed on that (usually tiny) warm set instead of the fleet.
+            # Decision-identical: everyone else's hit is provably 0, and a
+            # best hit of 0 routes load-best — exactly what the full scan
+            # concludes when no candidate has a positive hit.
+            warm_cands = candidates.warm_candidates(req)
+            hits = {c.name: c.prefix_hit_tokens(req) for c in warm_cands}
+            best = max(hits.values(), default=0)
+            if best < max(self.min_hit_tokens, 1):
+                return candidates.load_best(self.metric, now)
+            warm = [c for c in warm_cands if hits[c.name] == best]
+            load_best_fn = lambda: candidates.load_best(self.metric, now)
+        else:
+            hits = {c.name: c.prefix_hit_tokens(req) for c in candidates}
+            best = max(hits.values())
+            if best < self.min_hit_tokens:
+                return min(candidates, key=lambda c: c.load(self.metric, now))
+            warm = [c for c in candidates if hits[c.name] == best]
+            load_best_fn = lambda: min(
+                candidates, key=lambda c: c.load(self.metric, now))
         warm_best = min(warm, key=lambda c: c.load(self.metric, now))
         if self.fetch_load_factor is None or self.coordinator is None:
             return warm_best
-        load_best = min(candidates, key=lambda c: c.load(self.metric, now))
+        load_best = load_best_fn()
         if load_best is warm_best:
             return warm_best
         w_load = warm_best.load(self.metric, now)

@@ -52,6 +52,12 @@ class BatchedScheduler:
     def finish_step(self, step: SimpleStep, now: float) -> List[Request]:
         return step.requests
 
+    def requeue_step(self, step: SimpleStep) -> None:
+        """An in-flight step is being discarded unfinished (client fail or
+        removal): planning popped its requests off ``waiting``, so without
+        putting them back ``drain()`` would silently lose them."""
+        self.waiting.extendleft(reversed(step.requests))
+
     def drain(self) -> List[Request]:
         out = list(self.waiting)
         self.waiting.clear()
@@ -84,6 +90,9 @@ class SequentialScheduler:
 
     def finish_step(self, step: SimpleStep, now: float) -> List[Request]:
         return step.requests
+
+    def requeue_step(self, step: SimpleStep) -> None:
+        self.waiting.extendleft(reversed(step.requests))
 
     def drain(self) -> List[Request]:
         out = list(self.waiting)

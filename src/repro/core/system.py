@@ -56,6 +56,9 @@ class SystemSpec:
     # prefix_affinity fetch policy: warm-client overload factor beyond which
     # requests route load-best and the prefix migrates (None = affinity only)
     fetch_load_factor: Optional[float] = None
+    # fleet-scale routing indexes (decision-identical to the linear scan);
+    # False forces the O(N) baseline — the benchmark's A/B arm
+    fleet_index: bool = True
 
 
 def _embed_model_small() -> ModelConfig:
@@ -167,5 +170,6 @@ def build_system(spec: SystemSpec) -> Coordinator:
         prefix_migration=spec.prefix_migration,
         migration_granularity=spec.migration_granularity,
         warm_on_scale_out=spec.warm_on_scale_out,
-        warm_max_blocks=spec.warm_max_blocks))
+        warm_max_blocks=spec.warm_max_blocks,
+        fleet_index=spec.fleet_index))
     return coord

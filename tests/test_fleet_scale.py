@@ -1,0 +1,317 @@
+"""Fleet-scale routing indexes (src/repro/core/fleet.py): decision-identity
+against the linear-scan baseline, index maintenance under churn, round-robin
+determinism, bounded step history, and the metrics fast paths."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SLO, SystemSpec, WorkloadConfig, build_system,
+                        generate)
+from repro.core.client import LLMClient
+from repro.core.llm_scheduler import SchedulerLimits
+from repro.core.metrics import MetricsCollector, simulator_stats
+from repro.core.request import LLM, Request, regular_pipeline
+from repro.core.router import LOAD_METRICS, Router
+from repro.core.workload import synthetic_trace
+
+
+# ---------------------------------------------------------------------------
+# decision identity: indexed vs linear-scan candidate + routing path
+# ---------------------------------------------------------------------------
+
+class RecordingRouter(Router):
+    """Wraps any router and logs every (stage, chosen-client) decision."""
+
+    def __init__(self, inner, log):
+        self.inner = inner
+        self.log = log
+
+    @property
+    def metric(self):
+        # _sync dispatches on the router's metric attribute
+        return getattr(self.inner, "metric", None)
+
+    def bind(self, coordinator):
+        self.coordinator = coordinator
+        self.inner.bind(coordinator)
+
+    def route(self, req, candidates, now):
+        c = self.inner.route(req, candidates, now)
+        self.log.append((req.current_stage.kind, c.name))
+        return c
+
+
+def _clone(base: LLMClient, name: str) -> LLMClient:
+    return LLMClient(name, base.cluster, base.model_cfg, base.strategy,
+                     base.scheduler.limits, perf=base.scheduler.perf,
+                     group=base.group)
+
+
+def _apply_churn(coord, churn, allow_add: bool):
+    names = list(coord.clients)
+    n_added = 0
+    for kind, tgt, tfrac in churn:
+        t = 0.2 + 2.0 * tfrac
+        target = names[tgt % len(names)]
+        if kind == "add":
+            if not allow_add:
+                continue
+            spare = _clone(coord.clients[names[0]], f"extra{n_added}")
+            n_added += 1
+            coord.schedule_add_client(spare, t)
+        elif kind == "fail":
+            coord.schedule_failure(target, t)
+        elif kind == "fail_recover":
+            coord.schedule_failure(target, t, recover_at=t + 0.4)
+        elif kind == "remove":
+            coord.schedule_remove_client(target, t)
+
+
+def _run_arm(indexed, policy, metric, churn, *, disagg=False, straggler=False,
+             migration=False, n_requests=30, seed=3):
+    spec = SystemSpec(
+        n_llm_clients=4,
+        strategy="disaggregated" if disagg else "continuous",
+        disaggregation="local" if disagg else "global",
+        router_policy=policy, router_metric=metric,
+        limits=SchedulerLimits(max_batch=8),
+        with_pre_post=False,
+        straggler_deadline=0.05 if straggler else None,
+        prefix_migration=migration,
+        fetch_load_factor=1.5 if migration else None,
+        fleet_index=indexed)
+    coord = build_system(spec)
+    log = []
+    coord.router = RecordingRouter(coord.router, log)
+    coord.router.bind(coord)
+    trace = synthetic_trace(input_mean=192, input_std=0.4, output_mean=24,
+                            output_std=0.2, name="t")
+    coord.submit(generate(WorkloadConfig(
+        trace=trace, rate=40.0, n_requests=n_requests, process="poisson",
+        postprocess=False, seed=seed, disaggregated=disagg,
+        shared_prefix_pool=4, shared_prefix_tokens=128)))
+    _apply_churn(coord, churn, allow_add=not disagg)
+    err = None
+    try:
+        coord.run()
+    except RuntimeError as e:       # churn can legally empty a stage pool;
+        err = str(e)                # both arms must then fail identically
+    return log, err, coord.metrics.summary()
+
+
+def _summaries_equal(a, b):
+    if set(a) != set(b):
+        return False
+    for k in a:
+        x, y = a[k], b[k]
+        if x != y and not (isinstance(x, float) and isinstance(y, float)
+                           and math.isnan(x) and math.isnan(y)):
+            return False
+    return True
+
+
+def _assert_identical(policy, metric, churn, **kw):
+    log_i, err_i, s_i = _run_arm(True, policy, metric, churn, **kw)
+    log_s, err_s, s_s = _run_arm(False, policy, metric, churn, **kw)
+    assert log_i == log_s, (
+        f"{policy}/{metric}: indexed and scan arms diverge at decision "
+        f"{next(i for i, (a, b) in enumerate(zip(log_i, log_s)) if a != b) if log_i != log_s else '?'}")
+    assert err_i == err_s
+    if err_i is None:
+        assert _summaries_equal(s_i, s_s)
+
+
+# every router x load metric, under a fixed churn schedule hitting all four
+# event kinds (fail without recover excluded here so no arm ever empties a
+# stage pool; the hypothesis sweep below covers that path)
+FIXED_CHURN = [("add", 0, 0.1), ("fail_recover", 1, 0.2),
+               ("remove", 2, 0.6), ("fail_recover", 0, 0.8)]
+CASES = ([("round_robin", "queue")]
+         + [("load_based", m) for m in LOAD_METRICS]
+         + [("heavy_light", m) for m in ("queue", "kv_size",
+                                         "tokens_remaining")]
+         + [("prefix_affinity", m) for m in ("queue", "kv_pressure",
+                                             "tokens_remaining")])
+
+
+@pytest.mark.parametrize("policy,metric", CASES)
+def test_indexed_routing_identical_under_churn(policy, metric):
+    _assert_identical(policy, metric, FIXED_CHURN)
+
+
+def test_indexed_routing_identical_disaggregated_local():
+    # mixed prefill/decode stages + the local-disaggregation group filter
+    churn = [("fail_recover", 1, 0.3), ("fail_recover", 2, 0.7)]
+    _assert_identical("load_based", "queue", churn, disagg=True)
+    _assert_identical("round_robin", "queue", churn, disagg=True)
+
+
+def test_indexed_routing_identical_with_straggler_and_migration():
+    _assert_identical("prefix_affinity", "queue", FIXED_CHURN,
+                      straggler=True, migration=True)
+
+
+_churn_events = st.lists(
+    st.tuples(st.sampled_from(("add", "fail", "fail_recover", "remove")),
+              st.integers(min_value=0, max_value=3),
+              st.floats(min_value=0.0, max_value=1.0)),
+    min_size=0, max_size=4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(policy=st.sampled_from(("round_robin", "load_based", "heavy_light",
+                               "prefix_affinity")),
+       metric=st.sampled_from(LOAD_METRICS),
+       churn=_churn_events,
+       seed=st.integers(min_value=0, max_value=10))
+def test_indexed_routing_identical_random_churn(policy, metric, churn, seed):
+    _assert_identical(policy, metric, churn, seed=seed, n_requests=20)
+
+
+# ---------------------------------------------------------------------------
+# index maintenance corner cases
+# ---------------------------------------------------------------------------
+
+def test_readd_same_name_preserves_candidate_order():
+    # CLIENT_ADD over an existing name keeps its dict slot: the index must
+    # rebuild so per-stage iteration order stays baseline-identical
+    coord = build_system(SystemSpec(n_llm_clients=3, with_pre_post=False))
+    clone = _clone(coord.clients["llm1"], "llm1")
+    coord.schedule_add_client(clone, 0.0)
+    coord.run()
+    assert coord.clients["llm1"] is clone
+    view = coord.fleet.candidates(LLM)
+    assert [c.name for c in view] == ["llm0", "llm1", "llm2"]
+
+
+def test_inverted_index_tracks_radix_roots():
+    spec = SystemSpec(n_llm_clients=3, with_pre_post=False,
+                      router_policy="prefix_affinity", router_metric="queue")
+    coord = build_system(spec)
+    coord.submit(generate(WorkloadConfig(
+        rate=30.0, n_requests=40, postprocess=False, seed=5,
+        shared_prefix_pool=3, shared_prefix_tokens=256)))
+    coord.run()
+    inv = coord.fleet.inv
+    assert inv, "prefix workload should register chain roots"
+    for c in coord.clients.values():
+        radix = getattr(getattr(c.scheduler, "kv", None), "radix", None)
+        if radix is None:
+            continue
+        roots = {n.hash for n in radix.nodes.values() if n.is_root}
+        listed = {h for h, s in inv.items() if c.name in s}
+        assert roots == listed
+    # removing a client sweeps its entries out of the inverted index
+    name = next(iter(coord.clients))
+    coord.schedule_remove_client(name, coord.queue.now + 1.0)
+    coord.run()
+    assert all(name not in s for s in coord.fleet.inv.values())
+
+
+# ---------------------------------------------------------------------------
+# round-robin determinism under candidate-order churn (PR 4 heavy-light fix)
+# ---------------------------------------------------------------------------
+
+class _Stub:
+    kind = "llm"
+
+    def __init__(self, name):
+        self.name = name
+        self.failed = False
+
+
+def test_round_robin_invariant_to_candidate_order():
+    from repro.core.router import RoundRobinRouter
+    req = Request(arrival=0.0, input_tokens=8, output_tokens=8,
+                  stages=regular_pipeline(False, False))
+    a, b, c = _Stub("a"), _Stub("b"), _Stub("c")
+    r1, r2 = RoundRobinRouter(), RoundRobinRouter()
+    # same rotation regardless of the order the candidate list arrives in —
+    # a CLIENT_ADD/REMOVE reshuffling dict order must not reshuffle the
+    # assignment sequence
+    seq1 = [r1.route(req, [a, b, c], 0.0).name for _ in range(6)]
+    seq2 = [r2.route(req, [c, a, b], 0.0).name for _ in range(6)]
+    assert seq1 == seq2 == ["a", "b", "c", "a", "b", "c"]
+
+
+# ---------------------------------------------------------------------------
+# bounded step history + step_events counter
+# ---------------------------------------------------------------------------
+
+def _small_run(history_limit):
+    spec = SystemSpec(n_llm_clients=2, with_pre_post=False,
+                      limits=SchedulerLimits(max_batch=8,
+                                             history_limit=history_limit))
+    coord = build_system(spec)
+    coord.submit(generate(WorkloadConfig(rate=20.0, n_requests=20,
+                                         postprocess=False, seed=7)))
+    coord.run()
+    return coord
+
+
+def test_history_ring_buffer_and_counter():
+    full = _small_run(None)
+    ring = _small_run(4)
+    off = _small_run(0)
+    stats = {k: simulator_stats(c) for k, c in
+             (("full", full), ("ring", ring), ("off", off))}
+    # retention must not change what was simulated, only what is retained
+    assert stats["full"] == stats["ring"] == stats["off"]
+    for c in ring.clients.values():
+        assert len(c.scheduler.history) <= 4
+        assert c.scheduler.step_events >= len(c.scheduler.history)
+    for c in off.clients.values():
+        assert len(c.scheduler.history) == 0
+    total = sum(c.scheduler.step_events for c in full.clients.values())
+    assert stats["full"]["step_events"] == total > 0
+    # unbounded mode: counter agrees with the retained list
+    for c in full.clients.values():
+        assert c.scheduler.step_events == len(c.scheduler.history)
+
+
+# ---------------------------------------------------------------------------
+# metrics fast paths
+# ---------------------------------------------------------------------------
+
+def _fake_req(ttft, tpot_span, n_tokens, tier="default"):
+    r = Request(arrival=0.0, input_tokens=8, output_tokens=n_tokens,
+                stages=regular_pipeline(False, False), tier=tier)
+    r.first_token_time = ttft
+    r.decoded_tokens = n_tokens
+    r.last_token_time = ttft + tpot_span
+    r.completion_time = r.last_token_time
+    return r
+
+
+def test_latency_cache_invalidates_on_complete():
+    m = MetricsCollector()
+    m.complete(_fake_req(0.1, 0.5, 10))
+    assert m.ttfts == [pytest.approx(0.1)]
+    first = m._latency_arrays()
+    assert m._latency_arrays() is first          # cached between appends
+    m.complete(_fake_req(0.3, 0.5, 10))
+    assert len(m.ttfts) == 2                     # append invalidates
+    assert len(m.tpots) == 2 and len(m.e2es) == 2
+
+
+def test_goodput_by_tier():
+    m = MetricsCollector()
+    slo = SLO()
+    fast = slo.ttft_base  # well under the P50 multiplier
+    m.complete(_fake_req(fast, 0.1, 100, tier="interactive"))
+    m.complete(_fake_req(50.0, 0.1, 100, tier="interactive"))  # misses TTFT
+    m.complete(_fake_req(fast, 0.1, 200, tier="batch"))
+    by = m.goodput_by_tier(slo, horizon=10.0)
+    assert by == {"interactive": pytest.approx(10.0),
+                  "batch": pytest.approx(20.0)}
+    # per-tier SLOs: an impossible batch SLO zeroes only that tier
+    strict = SLO(ttft_base=0.0, tpot_base=0.0,
+                 ttft_mult={50: 0.0, 90: 0.0, 99: 0.0},
+                 tpot_mult={50: 0.0, 90: 0.0, 99: 0.0})
+    by = m.goodput_by_tier({"interactive": slo, "batch": strict}, 10.0)
+    assert by["interactive"] == pytest.approx(10.0)
+    assert by["batch"] == 0.0
+    # total goodput equals the single-SLO sum over tiers
+    assert (m.goodput(slo, 10.0)
+            == pytest.approx(sum(m.goodput_by_tier(slo, 10.0).values())))
