@@ -19,6 +19,7 @@ MODULES = [
     "prefix_cache",      # radix cache: branches x reuse x capacity sweep
     "prefix_migration",  # cross-client migration: BW x reuse x scale-out
     "scaling_clients",   # Fig. 13
+    "engine_disagg",     # real prefill/decode split: measured KV handoff
     "disaggregation",    # SII-B global/local + SIII-B2 transfer granularity
     "chunk_sweep",       # Fig. 6 chunk axis / Sarathi trade-off
     "spec_decode",       # SIII-E1 spec decode: engine + analytical + sim

@@ -33,6 +33,14 @@ class Network:
     def add_link(self, name: str, spec: LinkSpec):
         self.links[name] = LinkState(spec)
 
+    def override_link(self, name: str, spec: LinkSpec):
+        """Re-price an existing link in place, keeping its traffic counters
+        and contention state. This is the calibration hook: fleet builders
+        wire topology with catalog LinkSpecs, then a measured fit (e.g.
+        ``benchmarks/engine_disagg.py``'s timed KV-page handoffs) swaps in
+        observed alpha/beta without rebuilding the Network."""
+        self.links[name].spec = spec
+
     def connect(self, src: str, dst: str, link_names: List[str],
                 bidirectional: bool = True):
         self.paths[(src, dst)] = link_names

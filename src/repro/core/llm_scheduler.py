@@ -80,6 +80,15 @@ class SchedulerLimits:
     spec_k: int = 0
     spec_draft: str = "guard_2b"
     spec_acceptance: object = 0.8      # float | Sequence[float]
+    # swap granularity (§III-B2 applied to the swap path): "full" stalls for
+    # the whole table crossing the tier boundary; "layerwise" overlaps the
+    # move with layer-by-layer compute so only ~one layer group of payload is
+    # exposed — the same pricing the disaggregated KV handoff uses
+    # (``comm.Network._exposed`` / engine ``move_pages``). Bytes accounting
+    # is identical either way. ``swap_layer_groups=0`` means one group per
+    # model layer.
+    swap_granularity: str = "full"     # full | layerwise
+    swap_layer_groups: int = 0         # 0 -> num_layers
     # per-step history retention: None keeps every step dict (seed behavior,
     # fine for small fleets), 0 disables recording entirely, n > 0 keeps a
     # ring buffer of the last n steps. ``step_events`` stays a monotonic
@@ -627,6 +636,11 @@ class LLMScheduler:
             self._pending_swap_time = 0.0
             self._pending_preemptions = 0
 
+    def _swap_groups(self) -> int:
+        """Layer groups for layerwise swap pricing; 0 = one per layer."""
+        n = self.limits.swap_layer_groups
+        return n if n > 0 else self.cfg.num_layers
+
     def _try_swap_in(self):
         """Resume swapped-out requests oldest-first, keeping one block of
         headroom per running request to avoid swap ping-pong. When nothing
@@ -637,7 +651,8 @@ class LLMScheduler:
             headroom = len(self.running) if (self.running or self.waiting) else 0
             if need + headroom > self.kv.available_blocks:
                 break
-            res = self.kv.swap_in(r.rid)
+            res = self.kv.swap_in(r.rid, self.limits.swap_granularity,
+                                  self._swap_groups())
             if res is None:
                 break
             nbytes, t = res
@@ -691,7 +706,8 @@ class LLMScheduler:
             # swap moves physical pages, so it applies only to refcount-1
             # tables; shared-prefix / forked victims return None and degrade
             # to recompute (which merely drops references)
-            res = self.kv.swap_out(victim.rid)
+            res = self.kv.swap_out(victim.rid, self.limits.swap_granularity,
+                                   self._swap_groups())
             if res is not None:
                 nbytes, t = res
                 self._pending_swap_bytes += nbytes

@@ -101,10 +101,20 @@ def sample_retrieval_latency(size_bytes: float, tiers: Sequence[CacheTierSpec],
     return lat + miss_cost
 
 
-def tier_transfer_time(nbytes: float, tier: CacheTierSpec) -> float:
+def tier_transfer_time(nbytes: float, tier: CacheTierSpec,
+                       granularity: str = "full",
+                       n_layer_groups: int = 1) -> float:
     """One deterministic traversal of a tier boundary (Eq. 1 hit term).
     Used to price swap-out/swap-in; delegates to the spec so the allocator,
-    the analytical model and the retrieval client share one formula."""
+    the analytical model and the retrieval client share one formula.
+
+    ``granularity="layerwise"`` prices a per-layer-group swap pipelined
+    against layerwise compute, exactly like the disaggregated KV handoff
+    (``Network._exposed``): the wire still carries all ``nbytes``, but the
+    EXPOSED stall is one layer group of payload plus one lookup — the other
+    groups overlap the consumer's layer-by-layer compute."""
+    if granularity == "layerwise":
+        return tier.transfer_time(nbytes / max(1, n_layer_groups))
     return tier.transfer_time(nbytes)
 
 
@@ -727,12 +737,19 @@ class PagedKVAllocator:
         return rid in self.tables
 
     # -- preemption: swap ----------------------------------------------------
-    def swap_out(self, rid) -> Optional[Tuple[float, float]]:
+    def swap_out(self, rid, granularity: str = "full",
+                 n_layer_groups: int = 1) -> Optional[Tuple[float, float]]:
         """Offload a resident request's pages to the first spill tier with
         room. Returns (bytes_moved, transfer_time) or None when no tier can
         take them (caller falls back to recompute) — or when any page is
         shared (refcount > 1): a shared page cannot move without stranding
-        its other owners, so shared victims degrade to recompute."""
+        its other owners, so shared victims degrade to recompute.
+
+        ``granularity="layerwise"`` moves the table one layer group at a
+        time, overlapped with compute (``SchedulerLimits.swap_granularity``)
+        — bytes_moved is unchanged, transfer_time is the exposed stall of
+        ~one of ``n_layer_groups`` groups, the same §III-B2 pricing the
+        disaggregated handoff uses."""
         t = self.tables[rid]
         assert t.on_device
         if len(t.blocks) > self.num_blocks:
@@ -755,12 +772,15 @@ class PagedKVAllocator:
                 t.tier = i                     # hashes kept: swap_in restores
                 self.evictions += 1
                 self.swap_bytes_out += nbytes
-                return nbytes, tier_transfer_time(nbytes, tier.spec)
+                return nbytes, tier_transfer_time(nbytes, tier.spec,
+                                                  granularity, n_layer_groups)
         return None
 
-    def swap_in(self, rid) -> Optional[Tuple[float, float]]:
+    def swap_in(self, rid, granularity: str = "full",
+                n_layer_groups: int = 1) -> Optional[Tuple[float, float]]:
         """Bring a swapped request's pages back to HBM. Returns
-        (bytes_moved, transfer_time) or None when HBM lacks free blocks."""
+        (bytes_moved, transfer_time) or None when HBM lacks free blocks.
+        ``granularity`` prices the stall exactly like ``swap_out``."""
         t = self.tables[rid]
         assert not t.on_device
         n = len(t.blocks)
@@ -786,7 +806,8 @@ class PagedKVAllocator:
                 break
         self.swap_ins += 1
         self.swap_bytes_in += nbytes
-        return nbytes, tier_transfer_time(nbytes, tier.spec)
+        return nbytes, tier_transfer_time(nbytes, tier.spec,
+                                          granularity, n_layer_groups)
 
     # -- cross-client prefix migration ---------------------------------------
     def export_chain(self, prefix_hashes: Sequence[int], skip: int = 0,

@@ -90,6 +90,17 @@ class PagedTable:
 
 
 @dataclass
+class PageExport:
+    """A prefill-side handoff snapshot (``PagedKVStore.export_pages``): the
+    filled physical blocks (table order), fill length, and the prompt hash
+    chain the importing store dedups against."""
+    rid: int
+    blocks: List[int]
+    tokens: int
+    chain: List[int]
+
+
+@dataclass
 class Fork:
     """An in-flight speculative extension of one table (``fork_table``).
 
@@ -138,6 +149,12 @@ class PagedKVStore:
         self.block_refs_total = 0
         self.blocks_allocated_total = 0
         self.peak_blocks = 0
+        # disaggregated handoff accounting (export_pages / import_pages)
+        self.exports = 0
+        self.exported_blocks = 0
+        self.imports = 0
+        self.imported_blocks = 0
+        self.import_dedup_blocks = 0
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -273,7 +290,8 @@ class PagedKVStore:
 
     def allocate(self, rid: int, tokens: int, chain: Sequence[int] = (),
                  *, filled: Optional[int] = None,
-                 context_tokens: Optional[int] = None
+                 context_tokens: Optional[int] = None,
+                 count_hits: bool = True
                  ) -> Optional[Tuple[List[int], int]]:
         """Admission. Returns ``(blocks, n_matched)`` — the leading
         ``n_matched`` blocks are shared resident prefix pages the engine
@@ -289,7 +307,12 @@ class PagedKVStore:
         ``context_tokens`` is the full eventual context length. Matched
         prefix blocks are still claimed up to ``blocks_for(context_tokens)``
         — aliasing resident content is free, and it keeps prefix-hit
-        accounting identical to the whole-prompt path."""
+        accounting identical to the whole-prompt path.
+
+        ``count_hits=False`` claims matched blocks without counting them as
+        prefix hits — the decode-side page-import path uses this so handoff
+        dedup (wire bytes saved) never inflates the prefix-cache hit rate,
+        mirroring the simulator's ``PagedKVAllocator`` convention."""
         assert rid not in self.tables, f"double allocation for rid={rid}"
         context_tokens = int(tokens if context_tokens is None else context_tokens)
         need_chunk = self.blocks_for_tokens(tokens)
@@ -312,7 +335,7 @@ class PagedKVStore:
                 break
         t.hashes = list(chain[:n_reg])
         self.tables[rid] = t
-        if matched:
+        if matched and count_hits:
             self.prefix_hit_blocks += len(matched)
             self.prefix_hit_tokens += min(context_tokens,
                                           len(matched) * self.block_tokens)
@@ -522,6 +545,49 @@ class PagedKVStore:
         self.free(rid)
         self.recompute_drops += 1
 
+    # -- disaggregated handoff (export on prefill side, import on decode) ----
+    def export_pages(self, rid: int) -> "PageExport":
+        """Snapshot the FILLED portion of ``rid``'s table for a
+        prefill->decode handoff: the physical block ids the engine must
+        gather (in table order — position ``i`` covers tokens
+        ``[i*bt, (i+1)*bt)``), the fill length, and the prompt hash chain
+        the importing store dedups against. Mirrors the simulator's
+        ``PagedKVAllocator.export_chain`` contract, minus the pin: the
+        engine gathers the page payload synchronously before releasing the
+        table, so nothing can reclaim the pages mid-export."""
+        t = self.tables[rid]
+        assert t.on_device, "cannot export a swapped table"
+        assert rid not in self.forks, \
+            f"rid={rid}: export during an active fork (resolve it first)"
+        keep = self.blocks_for_tokens(t.tokens)
+        self.exports += 1
+        self.exported_blocks += keep
+        return PageExport(rid=rid, blocks=list(t.blocks[:keep]),
+                          tokens=t.tokens, chain=list(t.chain))
+
+    def import_pages(self, rid: int, tokens: int,
+                     chain: Sequence[int] = ()
+                     ) -> Optional[Tuple[List[int], int]]:
+        """Decode-side admission of an exported table: allocate
+        ``blocks_for(tokens)`` pages, aliasing any resident chain prefix —
+        the engine then scatters ONLY the unmatched pages' payload (matched
+        pages already hold bit-identical content by the hash-chain
+        contract: equal chains imply equal block-aligned token prefixes
+        imply equal K/V). Returns ``(blocks, n_matched)`` or None when the
+        pool cannot admit yet (head-of-line wait, like any admission).
+
+        Matched blocks count as ``import_dedup_blocks`` — wire bytes the
+        handoff never had to move — NOT as prefix-cache hits, mirroring the
+        simulator's decode-side ``count_hits=False`` convention."""
+        got = self.allocate(rid, tokens, chain, count_hits=False)
+        if got is None:
+            return None
+        blocks, n_matched = got
+        self.imports += 1
+        self.imported_blocks += len(blocks) - n_matched
+        self.import_dedup_blocks += n_matched
+        return got
+
     # -- reporting -----------------------------------------------------------
     def check_invariants(self):
         from collections import Counter
@@ -572,4 +638,9 @@ class PagedKVStore:
             "blocks_allocated_total": self.blocks_allocated_total,
             "dedup_ratio": (self.block_refs_total
                             / max(1, self.blocks_allocated_total)),
+            "exports": self.exports,
+            "exported_blocks": self.exported_blocks,
+            "imports": self.imports,
+            "imported_blocks": self.imported_blocks,
+            "import_dedup_blocks": self.import_dedup_blocks,
         }

@@ -63,3 +63,21 @@ def make_local_mesh():
     """Whatever devices exist locally, as a 1-D 'data' mesh (smoke tests)."""
     n = len(jax.devices())
     return compat_make_mesh((n,), ("data",))
+
+
+def handoff_devices(n_prefill: int, n_decode: int):
+    """Assign local jax devices to disaggregated worker roles
+    (``engine/workers.py``): prefill workers take the first half of the
+    device list, decode workers the rest, round-robin within each role — so
+    the prefill->decode KV handoff is a real cross-device ``jax.device_put``
+    whenever the host has >= 2 devices. With a single device both lists are
+    all-None, which the workers treat as "host-staged": pages ride through
+    host memory (``jax.device_get`` then scatter), the same degradation the
+    single-device engine's swap path uses."""
+    devs = jax.devices()
+    if len(devs) < 2:
+        return [None] * n_prefill, [None] * n_decode
+    split = max(1, min(len(devs) - 1, len(devs) // 2))
+    pd, dd = devs[:split], devs[split:]
+    return ([pd[i % len(pd)] for i in range(n_prefill)],
+            [dd[i % len(dd)] for i in range(n_decode)])

@@ -119,6 +119,61 @@ def verify_step(params, tokens, q_valid, caches, cfg: ModelConfig,
     return greedy, logits, caches
 
 
+# ---------------------------------------------------------------------------
+# paged-cache page movement (pure; jitted by the engines)
+# ---------------------------------------------------------------------------
+
+def write_prefill_pages(caches, dense, ids, *, max_blocks: int,
+                        block_tokens: int):
+    """Blockify a dense single-request prefill cache (``(L, 1, S, kvh, hd)``
+    leaves, ``S == max_blocks * block_tokens``) and scatter its blocks into
+    the paged pools at physical pages ``ids`` (``(max_blocks,)`` int32,
+    trash-padded past the request's blocks)."""
+    out = {}
+    for name, g in caches.items():
+        d, gg = dense[name], dict(g)
+        for ck, pk in (("k", "k_pool"), ("v", "v_pool")):
+            leaf = d[ck]                        # (L, 1, S, kvh, hd)
+            L = leaf.shape[0]
+            blocks = leaf[:, 0].reshape(L, max_blocks, block_tokens,
+                                        *leaf.shape[3:])
+            gg[pk] = g[pk].at[:, ids].set(blocks.astype(g[pk].dtype))
+        out[name] = gg
+    return out
+
+
+def gather_pages(caches, ids):
+    """Pull physical pages ``ids`` out of every paged cache group:
+    ``{group: {"k": (L, n, bt, kvh, hd), "v": ...}}`` — the page payload for
+    swap-out and for the disaggregated prefill->decode handoff."""
+    return {name: {"k": g["k_pool"][:, ids], "v": g["v_pool"][:, ids]}
+            for name, g in caches.items()}
+
+
+def scatter_pages(caches, pages, ids):
+    """Inverse of ``gather_pages``: write page payloads back into the pools
+    at physical pages ``ids`` (swap-in resume; decode-side page import)."""
+    out = {}
+    for name, g in caches.items():
+        gg = dict(g)
+        gg["k_pool"] = g["k_pool"].at[:, ids].set(pages[name]["k"])
+        gg["v_pool"] = g["v_pool"].at[:, ids].set(pages[name]["v"])
+        out[name] = gg
+    return out
+
+
+def copy_pages(caches, src, dst):
+    """Device-copy pages ``src`` onto pages ``dst`` within the same pools
+    (COW materialization for speculative forks)."""
+    out = {}
+    for name, g in caches.items():
+        gg = dict(g)
+        gg["k_pool"] = g["k_pool"].at[:, dst].set(g["k_pool"][:, src])
+        gg["v_pool"] = g["v_pool"].at[:, dst].set(g["v_pool"][:, src])
+        out[name] = gg
+    return out
+
+
 def init_train_state(cfg: ModelConfig, key):
     params, _ = tf.init_model(cfg, key)
     return {"params": params, "opt": init_opt_state(params)}

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.perfmodel import analytical as ana
-from repro.perfmodel.hardware import ClusterSpec
+from repro.perfmodel.hardware import ClusterSpec, LinkSpec
 
 
 def _poly_features_decode(batch, past):
@@ -102,6 +102,32 @@ def fit_from_trace(rows: np.ndarray, kind: str = "decode") -> FittedModel:
         fn = _poly_features_prefill
     w = ridge_fit(X, y)
     return FittedModel(w, fn, float(jnp.mean((X @ w - y) ** 2)))
+
+
+def fit_link_spec(samples: Sequence[Tuple[float, float]],
+                  name: str = "measured") -> LinkSpec:
+    """Alpha-beta fit of timed transfers: least-squares ``time = alpha +
+    nbytes / beta`` over (nbytes, seconds) samples, returned as a
+    ``LinkSpec(latency=alpha, bandwidth=beta)`` ready for
+    ``Network.override_link``. This closes the measure->calibrate->replay
+    loop: ``benchmarks/engine_disagg.py`` times real KV-page handoffs and
+    feeds the fit back into the simulator's link pricing.
+
+    Alpha is clamped to >= 0 (a negative fitted intercept just means the
+    latency term is below measurement noise); the slope is clamped to a tiny
+    positive value so beta stays finite. Needs >= 2 samples with distinct
+    sizes for a meaningful slope — with fewer, the fit degenerates to
+    bandwidth through the origin."""
+    arr = np.asarray(list(samples), dtype=np.float64)
+    if arr.ndim != 2 or arr.shape[0] == 0:
+        raise ValueError("fit_link_spec needs (nbytes, seconds) samples")
+    nbytes, secs = arr[:, 0], arr[:, 1]
+    if arr.shape[0] < 2 or float(np.ptp(nbytes)) == 0.0:
+        bw = float(np.sum(nbytes) / max(np.sum(secs), 1e-12))
+        return LinkSpec(name, max(bw, 1e-9), 0.0)
+    slope, alpha = np.polyfit(nbytes, secs, 1)
+    slope = max(float(slope), 1e-18)          # beta = 1/slope stays finite
+    return LinkSpec(name, 1.0 / slope, max(float(alpha), 0.0))
 
 
 @jax.jit
