@@ -1,0 +1,273 @@
+"""Closed-loop autoscaler benchmark: diurnal + surge traffic vs fleet cost.
+
+ROADMAP item 4's question: can a goodput-driven controller ride a diurnal
+trace with a flash surge, matching a peak-provisioned static fleet on
+delivered goodput while paying closer to a trough-provisioned one? The
+scenario is a two-tier (interactive + batch) workload whose arrival rate
+follows a multi-phase schedule (``WorkloadConfig.rate_phases``): overnight
+base load, a morning climb, a midday flash surge, an evening trough. Five
+arms run the same request population:
+
+- ``static_trough`` / ``static_peak``: fixed fleets at the trough / peak size
+- ``autoscale_threshold`` / ``autoscale_target``: closed-loop fleets under
+  the two built-in policies, scale-out warmed by prefix migration
+- ``autoscale_target_cold``: the target-tracking arm with
+  ``warm_on_scale_out`` disabled — the cold-vs-warm TTFT recovery control
+
+Reported per arm: SLO-gated goodput (total and per tier), TTFT p50/p90,
+client-seconds cost, makespan, fleet-size trace, scale action log, and TTFT
+over the post-scale-out recovery windows (warm vs cold). Emits
+``BENCH_autoscale.json`` next to this file.
+
+``--check`` gates (the simulator is deterministic, so these are hard):
+- every arm serviced its entire request population (no lost requests)
+- goodput(autoscale_target) >= goodput(static_trough): the controller must
+  buy real goodput at the surge
+- client_seconds(autoscale_target) <= client_seconds(static_peak): and pay
+  less than peak provisioning for it
+- the warm arm's scaled-out replicas actually serve prefix hits off migrated
+  pages (warm hit-tokens > 0); warm recovery TTFT regressing past the cold
+  arm's is an advisory warning (wall-clock-free but workload-sensitive)
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+if __package__ in (None, ""):                      # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import row
+from repro.core import SystemSpec, WorkloadConfig, build_system, generate
+from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
+                                   ClientTemplate, make_policy)
+from repro.core.llm_scheduler import SchedulerLimits
+from repro.core.metrics import SLO, percentile
+from repro.core.request import LLM
+from repro.core.workload import synthetic_trace
+
+N_REQUESTS = 600
+SMOKE_REQUESTS = 360
+RATE = 2.0                      # calm (overnight) interactive arrivals/sec
+SURGE = 4.0                     # flash-surge rate multiplier
+TROUGH_FLEET = 2
+PEAK_FLEET = 6
+RECOVERY_WINDOW = 2.0           # post-scale-out TTFT observation window
+
+# tier targets an adequately-provisioned fleet can actually meet: TTFT is
+# the load-sensitive term (queueing), TPOT is a property of the model/chip
+# (~50ms/token here) so its cap sits above that floor — an unachievable
+# TPOT target would peg any SLO-aware policy at max fleet forever
+TIER_SLOS = {"interactive": SLO(tpot_base=0.075),
+             "batch": SLO(ttft_base=2.0, tpot_base=0.100)}
+
+ACFG = AutoscalerConfig(interval=0.25, window=1.0,
+                        min_clients=TROUGH_FLEET, max_clients=PEAK_FLEET,
+                        cooldown_out=0.25, cooldown_in=1.0)
+
+
+def _phases(n_requests: int):
+    """Diurnal schedule sized to the request population: a calm first third,
+    a flash surge over the next eighth of the span, then an evening lull.
+    Breakpoints scale with the base span so smoke and full runs see the same
+    shape."""
+    span = ((2 * n_requests) // 3) / RATE      # interactive-tier base span
+    t1 = round(span / 3, 3)
+    t2 = round(t1 + span / 8, 3)
+    return ((t1, SURGE), (t2, 0.75))
+
+
+def _workload(n_requests: int) -> List:
+    """Two-tier population riding one diurnal phase schedule. Phases are a
+    deterministic time-warp, so every arm sees identical requests."""
+    phases = _phases(n_requests)
+    inter = synthetic_trace(input_mean=256, input_std=0.4, output_mean=64,
+                            output_std=0.2, name="interactive")
+    batch = synthetic_trace(input_mean=768, input_std=0.5, output_mean=128,
+                            output_std=0.2, name="batch")
+    n_inter = (2 * n_requests) // 3
+    reqs = generate(WorkloadConfig(
+        trace=inter, rate=RATE, n_requests=n_inter, process="poisson",
+        postprocess=False, seed=31, shared_prefix_pool=6,
+        shared_prefix_tokens=256, rate_phases=phases))
+    for r in reqs:
+        r.tier = "interactive"
+    breqs = generate(WorkloadConfig(
+        trace=batch, rate=RATE / 2, n_requests=n_requests - n_inter,
+        process="poisson", postprocess=False, seed=32,
+        shared_prefix_pool=6, shared_prefix_tokens=256, rate_phases=phases))
+    for r in breqs:
+        r.tier = "batch"
+    return reqs + breqs
+
+
+def _system(n_clients: int) -> "Coordinator":
+    spec = SystemSpec(n_llm_clients=n_clients, with_pre_post=False,
+                      router_policy="load_based", router_metric="queue",
+                      limits=SchedulerLimits(max_batch=16, history_limit=64),
+                      prefix_migration=True)
+    return build_system(spec)
+
+
+def _recovery_ttfts(metrics, actions) -> List[float]:
+    """TTFTs of requests arriving inside the post-scale-out windows."""
+    adds = [t for t, kind, _ in actions if kind == "add"]
+    out = []
+    for r in metrics.serviced:
+        if r.ttft is None:
+            continue
+        if any(t <= r.arrival <= t + RECOVERY_WINDOW for t in adds):
+            out.append(r.ttft)
+    return out
+
+
+def _run_arm(name: str, n_requests: int, n_clients: int,
+             policy: Optional[str] = None, warm: bool = True) -> Dict:
+    coord = _system(n_clients)
+    coord.cfg.warm_on_scale_out = warm
+    scaler = None
+    if policy is not None:
+        base = next(c for c in coord.clients.values() if c.stages == (LLM,))
+        scaler = Autoscaler(ClientTemplate.from_client(base),
+                            policy=make_policy(policy), cfg=ACFG,
+                            slos=TIER_SLOS)
+        coord.attach_autoscaler(scaler)
+    reqs = _workload(n_requests)
+    coord.submit(reqs)
+    t0 = time.perf_counter()
+    metrics = coord.run()
+    wall = time.perf_counter() - t0
+    makespan = coord.queue.now
+    tiers = metrics.goodput_by_tier(TIER_SLOS, makespan)
+    summary = metrics.summary(horizon=makespan, slo=SLO())
+    prefix_seen = metrics.kv.get("prefix_tokens_seen", 0)
+    return {
+        "arm": name,
+        "n_requests": len(reqs),
+        "n_serviced": len(metrics.serviced),
+        "makespan_s": makespan,
+        "wall_s": wall,
+        "goodput_tok_s": sum(tiers.values()),
+        "goodput_by_tier": tiers,
+        "throughput_tok_s": summary["throughput_tok_s"],
+        "ttft_p50": percentile(metrics.ttfts, 50),
+        "ttft_p90": percentile(metrics.ttfts, 90),
+        "client_seconds": (scaler.client_seconds if scaler is not None
+                           else n_clients * makespan),
+        "fleet_trace": (scaler.fleet_trace if scaler is not None
+                        else [[0.0, n_clients], [makespan, n_clients]]),
+        "actions": (scaler.actions if scaler is not None else []),
+        "checks": (scaler.checks if scaler is not None else 0),
+        "migration_hit_tokens": metrics.kv.get("migration_hit_tokens", 0),
+        "warm_hit_rate": (metrics.kv.get("migration_hit_tokens", 0)
+                          / max(prefix_seen, 1)),
+        "recovery_ttft_p50": percentile(
+            _recovery_ttfts(metrics, scaler.actions if scaler else []), 50),
+    }
+
+
+def _write_json(results: List[Dict], smoke: bool) -> str:
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_autoscale.json")
+    by = {r["arm"]: r for r in results}
+    with open(path, "w") as f:
+        json.dump({
+            "scenario": "two-tier diurnal + flash surge "
+                        f"(x{SURGE} surge, 0.75x lull), "
+                        f"trough={TROUGH_FLEET} peak={PEAK_FLEET} clients",
+            "smoke": smoke,
+            "goodput_vs_trough":
+                by["autoscale_target"]["goodput_tok_s"]
+                / max(by["static_trough"]["goodput_tok_s"], 1e-9),
+            "cost_vs_peak":
+                by["autoscale_target"]["client_seconds"]
+                / max(by["static_peak"]["client_seconds"], 1e-9),
+            "results": results,
+        }, f, indent=1)
+    return path
+
+
+ARMS = (
+    ("static_trough", TROUGH_FLEET, None, True),
+    ("static_peak", PEAK_FLEET, None, True),
+    ("autoscale_threshold", TROUGH_FLEET, "threshold", True),
+    ("autoscale_target", TROUGH_FLEET, "target_tracking", True),
+    ("autoscale_target_cold", TROUGH_FLEET, "target_tracking", False),
+)
+
+
+def run(smoke: bool = False) -> List[str]:
+    out = []
+    n_requests = SMOKE_REQUESTS if smoke else N_REQUESTS
+    results = []
+    for name, n_clients, policy, warm in ARMS:
+        t0 = time.perf_counter()
+        r = _run_arm(name, n_requests, n_clients, policy, warm)
+        results.append(r)
+        us = (time.perf_counter() - t0) * 1e6
+        sizes = [n for _, n in r["fleet_trace"]]
+        out.append(row(
+            f"{name}{'_smoke' if smoke else ''}", us,
+            f"goodput={r['goodput_tok_s']:.0f}tok/s "
+            f"cost={r['client_seconds']:.1f}cs "
+            f"fleet={min(sizes)}..{max(sizes)} "
+            f"ttft_p50={r['ttft_p50']:.3f}s "
+            f"serviced={r['n_serviced']}/{r['n_requests']}"))
+    path = _write_json(results, smoke)
+    out.append(row("autoscale_json", 0.0,
+                   f"wrote {path} ({len(results)} arms)"))
+    return out
+
+
+def check(results_path: str) -> int:
+    """CI gate (see module docstring). The simulator is deterministic, so
+    goodput/cost/lost-request gates fail hard; only the warm-vs-cold TTFT
+    recovery comparison is advisory."""
+    with open(results_path) as f:
+        data = json.load(f)
+    by = {r["arm"]: r for r in data["results"]}
+    errors = []
+    for r in data["results"]:
+        if r["n_serviced"] != r["n_requests"]:
+            errors.append(f"{r['arm']}: lost requests "
+                          f"({r['n_serviced']}/{r['n_requests']} serviced)")
+    target, trough, peak = (by["autoscale_target"], by["static_trough"],
+                            by["static_peak"])
+    if target["goodput_tok_s"] < trough["goodput_tok_s"]:
+        errors.append(
+            f"autoscaled goodput {target['goodput_tok_s']:.0f} tok/s below "
+            f"the static trough fleet's {trough['goodput_tok_s']:.0f}")
+    if target["client_seconds"] > peak["client_seconds"]:
+        errors.append(
+            f"autoscaled cost {target['client_seconds']:.1f} client-seconds "
+            f"above the static peak fleet's {peak['client_seconds']:.1f}")
+    if not target["actions"]:
+        errors.append("autoscale_target never scaled: the surge should "
+                      "force at least one action")
+    if target["migration_hit_tokens"] <= 0:
+        errors.append("warm scale-out served no prefix hits off migrated "
+                      "pages (migration_hit_tokens == 0)")
+    cold = by.get("autoscale_target_cold")
+    if cold is not None:
+        w, c = target["recovery_ttft_p50"], cold["recovery_ttft_p50"]
+        if not math.isnan(w) and not math.isnan(c) and w > c * 1.25:
+            print(f"CHECK WARNING: warm recovery TTFT p50 {w:.3f}s exceeds "
+                  f"cold arm's {c:.3f}s by >25%", file=sys.stderr)
+    for e in errors:
+        print(f"CHECK FAILED: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+    if "--check" in sys.argv:
+        json_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "BENCH_autoscale.json")
+        raise SystemExit(check(json_path))

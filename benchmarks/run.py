@@ -26,6 +26,7 @@ MODULES = [
     "kernel_bench",      # kernel rooflines
     "sim_throughput",    # simulator cost: decode fast-forward on vs off
     "fleet_scale",       # simulator cost: indexed routing at 10..1000 clients
+    "autoscale",         # closed-loop autoscaler: diurnal goodput vs cost
 ]
 
 

@@ -1,6 +1,10 @@
 """HERMES core: heterogeneous multi-stage LLM inference simulator (the
 paper's primary contribution — coordinator, clients, schedulers, batching,
 memory hierarchy, comm model, workloads, metrics, fault handling)."""
+from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,  # noqa: F401
+                                   ClientTemplate, Observation,
+                                   TargetTrackingPolicy,
+                                   ThresholdHysteresisPolicy, make_policy)
 from repro.core.coordinator import Coordinator, CoordinatorConfig  # noqa: F401
 from repro.core.metrics import SLO, MetricsCollector  # noqa: F401
 from repro.core.system import SystemSpec, build_system  # noqa: F401

@@ -59,6 +59,9 @@ class Coordinator:
         self._migrations_inflight: set = set()
         self.fleet: Optional[FleetIndex] = \
             FleetIndex(self) if self.cfg.fleet_index else None
+        # closed-loop autoscaler (core/autoscaler.py), ticked on periodic
+        # AUTOSCALE_CHECK events; None = open-loop (scripted churn only)
+        self.autoscaler = None
         self.router.bind(self)
         # times of pending *external* events (everything but step completions)
         # — the fast-forward planner stops windows at the next one so the
@@ -94,6 +97,19 @@ class Coordinator:
 
     def schedule_remove_client(self, client_name: str, at: float):
         self._push_ext(at, ev.CLIENT_REMOVE, client_name)
+
+    def attach_autoscaler(self, scaler, start_at: Optional[float] = None):
+        """Close the scaling loop: tick ``scaler`` every
+        ``scaler.cfg.interval`` seconds, starting one interval from now (or
+        at ``start_at``). Check events are deliberately NOT external-event
+        horizon caps: a check that takes no action must not cut decode
+        fast-forward windows, and one that does interrupts its targets
+        through the ordinary add/remove paths."""
+        self.autoscaler = scaler
+        scaler.bind(self, self.queue.now)
+        t0 = start_at if start_at is not None \
+            else self.queue.now + scaler.cfg.interval
+        self.queue.push(t0, ev.AUTOSCALE_CHECK, None)
 
     # ------------------------------------------------------------------
     # stages that may be absent from a system spec; requests skip them
@@ -515,15 +531,19 @@ class Coordinator:
                     self._kick(c, now)
 
             elif kind == ev.CLIENT_ADD:
-                c: Client = event.payload
-                self.clients[c.name] = c
-                if self.fleet is not None:
-                    self.fleet.add(c)
-                self._warm_client(c, now)      # scaled-out replica is cold
-                self._kick(c, now)
+                self._on_add(event.payload, now)
 
             elif kind == ev.CLIENT_REMOVE:
                 self._on_remove(event.payload, now)
+
+            elif kind == ev.AUTOSCALE_CHECK:
+                if self.autoscaler is not None:
+                    self.autoscaler.on_check(self, now)
+                    # re-arm while anything remains in flight; when the last
+                    # pending event is this check, the loop is allowed to end
+                    if len(self.queue):
+                        self.queue.push(now + self.autoscaler.cfg.interval,
+                                        ev.AUTOSCALE_CHECK, None)
 
             elif kind == ev.STRAGGLER_CHECK:
                 self._check_straggler(*event.payload, now)
@@ -542,6 +562,8 @@ class Coordinator:
         for name in list(self._active_step):
             self._interrupt(name, horizon, inclusive=True)
 
+        if self.autoscaler is not None:     # close the client-seconds
+            self.autoscaler.finalize(self, self.queue.now)   # cost integral
         self.metrics.collect_kv(self.clients.values())
         return self.metrics
 
@@ -569,12 +591,34 @@ class Coordinator:
             # streamed to the user are kept.
             self._dispatch(req, now)
 
+    def _on_add(self, c: Client, now: float):
+        """CLIENT_ADD (scripted schedule or autoscaler scale-out)."""
+        self.clients[c.name] = c
+        if self.fleet is not None:
+            self.fleet.add(c)
+        self._warm_client(c, now)              # scaled-out replica is cold
+        self._kick(c, now)
+
     def _on_remove(self, name: str, now: float):
         if name in self.clients:
             self._interrupt(name, now, reschedule=False)
         client = self.clients.pop(name, None)
         if client is None:
             return
+        # mid-migration removal: a removed *donor* must not leave its export
+        # pins behind (retired kv_stats would count permanently-pinned
+        # blocks, and check_invariants on the retired allocator would fail);
+        # a removed *recipient* must not leave its in-flight keys behind —
+        # a warm-pool replica re-added later under the same name would be
+        # refused warming by the stale dedup key. The MIGRATE_DONE events
+        # themselves land as no-ops: release against a discarded handle
+        # does nothing, and the dst lookup misses (or finds the same-named
+        # fresh replica, which the import then legitimately warms).
+        kv = self._kv_of(client)
+        if kv is not None:
+            kv.discard_exports()
+        self._migrations_inflight = {
+            k for k in self._migrations_inflight if k[0] != name}
         self.metrics.retire_client_kv(client)
         step = self._active_step.pop(name, None)
         if step is not None:

@@ -19,6 +19,7 @@ CLIENT_REMOVE = "client_remove"
 STRAGGLER_CHECK = "straggler_check"        # per-dispatch rescue deadline
 PREFIX_MIGRATE = "prefix_migrate"          # start shipping a radix KV chain
 MIGRATE_DONE = "migrate_done"              # migrated chain landed at dst
+AUTOSCALE_CHECK = "autoscale_check"        # periodic closed-loop controller tick
 
 
 @dataclass(order=True)

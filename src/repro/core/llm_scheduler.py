@@ -129,18 +129,29 @@ class LLMStep:
         return pre + dec * self.n_steps
 
 
+# SLO-tier admission ranks for the ``slo_tier`` packing: lower ranks admit
+# first (interactive traffic has the tightest TTFT SLO, batch the loosest).
+# Tiers outside the map take the "default" rank, between the two.
+TIER_PRIORITY: Dict[str, int] = {"interactive": 0, "default": 1, "batch": 2}
+
+
 class WaitQueue:
     """Admission queue for ``LLMScheduler``.
 
     ``fcfs`` packing is a deque — ``popleft``/``appendleft`` replace the
-    O(n) list-head ``pop(0)``/``insert(0)`` churn. ``least_work`` packing is
-    an incremental lazy-deletion min-heap keyed on remaining work at push
-    time, replacing the full re-sort previously done on every ``add``.
-    Iteration yields live requests in insertion order (heap order only
+    O(n) list-head ``pop(0)``/``insert(0)`` churn. ``least_work`` and
+    ``slo_tier`` packings are incremental lazy-deletion min-heaps, replacing
+    the full re-sort previously done on every ``add``: ``least_work`` keys
+    on remaining work at push time; ``slo_tier`` keys on the request's SLO
+    tier rank (``TIER_PRIORITY``), FCFS within a tier, so under overload
+    interactive-tier requests admit ahead of earlier-arrived batch requests
+    (per-tier SLO-aware admission). Preempted victims rejoin their tier's
+    tail. Iteration yields live requests in insertion order (heap order only
     matters at the head)."""
 
     def __init__(self, packing: str = "fcfs"):
         self.packing = packing
+        self._heaped = packing in ("least_work", "slo_tier")
         self._dq: deque = deque()
         self._heap: List[Tuple[float, int, Request]] = []
         self._live: Dict[int, Request] = {}    # id(req) -> req (heap mode)
@@ -150,9 +161,17 @@ class WaitQueue:
     def _work(r: Request) -> int:
         return r.effective_prefill_tokens + r.remaining_tokens
 
+    @staticmethod
+    def _rank(r: Request) -> int:
+        return TIER_PRIORITY.get(getattr(r, "tier", "default"),
+                                 TIER_PRIORITY["default"])
+
+    def _key(self, r: Request) -> float:
+        return self._work(r) if self.packing == "least_work" else self._rank(r)
+
     def push(self, r: Request):
-        if self.packing == "least_work":
-            heappush(self._heap, (self._work(r), next(self._seq), r))
+        if self._heaped:
+            heappush(self._heap, (self._key(r), next(self._seq), r))
             self._live[id(r)] = r
         else:
             self._dq.append(r)
@@ -162,7 +181,7 @@ class WaitQueue:
 
     def requeue(self, r: Request):
         """Preempted victim: back to the head (FCFS) / keyed spot (heap)."""
-        if self.packing == "least_work":
+        if self._heaped:
             self.push(r)
         else:
             self._dq.appendleft(r)
@@ -176,12 +195,12 @@ class WaitQueue:
         return None
 
     def peek(self) -> Optional[Request]:
-        if self.packing == "least_work":
+        if self._heaped:
             return self._head()
         return self._dq[0] if self._dq else None
 
     def popleft(self) -> Request:
-        if self.packing == "least_work":
+        if self._heaped:
             r = self._head()
             heappop(self._heap)
             del self._live[id(r)]
@@ -189,7 +208,7 @@ class WaitQueue:
         return self._dq.popleft()
 
     def remove(self, r: Request) -> bool:
-        if self.packing == "least_work":
+        if self._heaped:
             return self._live.pop(id(r), None) is not None
         try:
             self._dq.remove(r)
@@ -203,24 +222,26 @@ class WaitQueue:
         self._live.clear()
 
     def __contains__(self, r: Request) -> bool:
-        if self.packing == "least_work":
+        if self._heaped:
             return id(r) in self._live
         return r in self._dq
 
     def __iter__(self) -> Iterable[Request]:
-        if self.packing == "least_work":
+        if self._heaped:
             return iter(list(self._live.values()))
         return iter(self._dq)
 
     def __reversed__(self):
-        if self.packing == "least_work":
-            # the list version was kept sorted by work, so reversed() meant
-            # heaviest-first — preserve that for victim-selection callers
-            return reversed(sorted(self._live.values(), key=self._work))
+        if self._heaped:
+            # the list version was kept sorted by key, so reversed() means
+            # worst-candidate-first (heaviest work / lowest-priority tier)
+            # — preserve that for victim-selection callers. The sort is
+            # stable, so within a tier later arrivals are preempted first.
+            return reversed(sorted(self._live.values(), key=self._key))
         return reversed(self._dq)
 
     def __len__(self) -> int:
-        if self.packing == "least_work":
+        if self._heaped:
             return len(self._live)
         return len(self._dq)
 

@@ -1,6 +1,7 @@
 """Metrics collection (paper §III-F2): request / scheduler / client / global."""
 from __future__ import annotations
 
+from bisect import bisect_left, bisect_right
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -99,6 +100,13 @@ class MetricsCollector:
         # property reads a summary() used to pay separately for.
         self._lat_key: int = -1
         self._lat: tuple = ([], [], [])
+        # completion-time array for the sliding-window views, grown
+        # incrementally (append-only, like serviced itself). Events pop in
+        # nondecreasing time order and complete() runs at event time, so the
+        # array is sorted — window boundaries resolve by bisection. The
+        # windowed-metrics regression test recomputes from the raw list to
+        # guard both the sort assumption and this cache's invalidation.
+        self._ct: List[float] = []
 
     def complete(self, req: Request):
         self.serviced.append(req)
@@ -212,6 +220,100 @@ class MetricsCollector:
                 tok[tier] += r.decoded_tokens * r.branches
         return {t: n / max(horizon, 1e-9)
                 for t, n in tok.items() if caps[t] is not None}
+
+    # ------------------------------------------------------------------
+    # sliding-window views (closed-loop autoscaler observations): recent,
+    # not cumulative, health. A window is the closed completion-time
+    # interval [since, until]; ``until=None`` means "everything so far".
+    # ------------------------------------------------------------------
+    def _completion_times(self) -> List[float]:
+        ct = self._ct
+        sv = self.serviced
+        if len(ct) < len(sv):
+            for r in sv[len(ct):]:
+                t = r.completion_time
+                ct.append(float("inf") if t is None else t)
+        return ct
+
+    def window_view(self, since: float,
+                    until: Optional[float] = None) -> List[Request]:
+        """Requests whose completion time falls in ``[since, until]``, in
+        completion order (a contiguous slice of ``serviced``)."""
+        ct = self._completion_times()
+        lo = bisect_left(ct, since)
+        hi = len(ct) if until is None else bisect_right(ct, until)
+        return self.serviced[lo:hi]
+
+    @staticmethod
+    def _tier_caps(slos, tier: str):
+        """P50 (ttft_cap, tpot_cap) for ``tier`` under one SLO or a
+        tier->SLO mapping (same fallback rules as ``goodput_by_tier``);
+        None when the tier has no SLO."""
+        slo = (slos if isinstance(slos, SLO)
+               else slos.get(tier, slos.get("default")))
+        if slo is None:
+            return None
+        return (slo.ttft_base * slo.ttft_mult[50],
+                slo.tpot_base * slo.tpot_mult[50])
+
+    def window_stats(self, since: float, until: Optional[float] = None,
+                     slos=None) -> Dict:
+        """One-pass recent-health summary over the ``[since, until]``
+        completion window: serviced/token counts, TTFT/TPOT percentiles,
+        and — when ``slos`` is given (one SLO or a tier->SLO mapping) —
+        per-tier SLO-attainment fractions and windowed goodput. Goodput
+        divides by the window span, so ``until`` defaults to the newest
+        completion when open-ended. Matches a brute-force recompute over
+        the raw ``serviced`` list by contract (regression-tested)."""
+        reqs = self.window_view(since, until)
+        ttfts: List[float] = []
+        tpots: List[float] = []
+        tokens = 0
+        caps: Dict[str, Optional[tuple]] = {}
+        ok: Dict[str, int] = {}
+        n_tier: Dict[str, int] = {}
+        good_tok: Dict[str, int] = {}
+        for r in reqs:
+            tokens += r.decoded_tokens * r.branches
+            if r.ttft is not None:
+                ttfts.append(r.ttft)
+            if r.tpot is not None and r.decoded_tokens > 1:
+                tpots.append(r.tpot)
+            if slos is None:
+                continue
+            tier = getattr(r, "tier", "default")
+            if tier not in caps:
+                caps[tier] = self._tier_caps(slos, tier)
+                ok[tier] = n_tier[tier] = good_tok[tier] = 0
+            if caps[tier] is None:
+                continue
+            n_tier[tier] += 1
+            ttft_cap, tpot_cap = caps[tier]
+            if ((r.ttft or 1e9) <= ttft_cap
+                    and (r.tpot if r.tpot is not None else 0.0) <= tpot_cap):
+                ok[tier] += 1
+                good_tok[tier] += r.decoded_tokens * r.branches
+        end = until
+        if end is None:
+            end = max((c for c in (r.completion_time for r in reqs)
+                       if c is not None), default=since)
+        span = max(end - since, 1e-9)
+        out: Dict = {
+            "since": since, "until": end, "n": len(reqs), "tokens": tokens,
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p90": percentile(ttfts, 90),
+            "tpot_p50": percentile(tpots, 50),
+            "tpot_p90": percentile(tpots, 90),
+        }
+        if slos is not None:
+            out["slo_frac_by_tier"] = {
+                t: ok[t] / n_tier[t] for t in n_tier if n_tier[t] > 0}
+            scored = sum(n_tier.values())
+            out["slo_frac"] = (sum(ok.values()) / scored if scored else None)
+            out["goodput_by_tier"] = {t: good_tok[t] / span for t in good_tok
+                                      if caps[t] is not None}
+            out["goodput_tok_s"] = sum(good_tok.values()) / span
+        return out
 
     def summary(self, horizon: Optional[float] = None,
                 total_energy: float = 0.0, slo: Optional[SLO] = None) -> Dict:

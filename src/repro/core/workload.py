@@ -98,15 +98,58 @@ class WorkloadConfig:
     # see the same request population.
     rate_ramp_at: Optional[float] = None
     rate_ramp: float = 1.0
+    # multi-phase generalization (diurnal / surge traces for the closed-loop
+    # autoscaler): ``((t0, m0), (t1, m1), ...)`` — from wall-clock ``t_i``
+    # until the next breakpoint the instantaneous arrival rate is
+    # ``rate * m_i`` (multiplier 1.0 before ``t0``). Like ``rate_ramp``,
+    # phases are a deterministic time-warp of one base-rate arrival
+    # sequence, so every phase schedule sees the same request population.
+    # Mutually exclusive with ``rate_ramp_at``.
+    rate_phases: Optional[tuple] = None
+
+
+def warp_times(times: np.ndarray, phases) -> np.ndarray:
+    """Deterministically time-warp base-rate arrival times through a
+    piecewise-constant rate-multiplier schedule ``((t0, m0), (t1, m1), ...)``
+    (breakpoints in warped/wall-clock time, strictly increasing, multipliers
+    > 0; multiplier is 1.0 before ``t0``). A base arrival consuming ``s``
+    seconds of unit-rate "arrival work" lands at the wall-clock time ``w``
+    where the integral of the multiplier over ``[0, w]`` equals ``s``."""
+    if not phases:
+        return times
+    ts = [float(t) for t, _ in phases]
+    ms = [float(m) for _, m in phases]
+    if any(t1 <= t0 for t0, t1 in zip(ts, ts[1:])):
+        raise ValueError(f"rate_phases breakpoints must strictly increase: {ts}")
+    if any(m <= 0 for m in ms):
+        raise ValueError(f"rate_phases multipliers must be positive: {ms}")
+    # base-time ("work") consumed at each breakpoint: before t0 the
+    # multiplier is 1, afterwards each phase spends (t_{i+1}-t_i)*m_i
+    work = [ts[0]]
+    for i in range(len(ts) - 1):
+        work.append(work[-1] + (ts[i + 1] - ts[i]) * ms[i])
+    idx = np.searchsorted(work, times, side="right") - 1
+    out = np.asarray(times, dtype=float).copy()
+    pre = idx < 0                       # before the first breakpoint: identity
+    post = ~pre
+    i = np.clip(idx, 0, len(ts) - 1)
+    out[post] = (np.asarray(ts)[i][post]
+                 + (times[post] - np.asarray(work)[i][post])
+                 / np.asarray(ms)[i][post])
+    return out
 
 
 def generate(cfg: WorkloadConfig) -> List[rq.Request]:
     rng = np.random.default_rng(cfg.seed)
     ins, outs = cfg.trace.sample(rng, cfg.n_requests)
     times = arrival_times(rng, cfg.n_requests, cfg.rate, cfg.process)
+    if cfg.rate_phases and cfg.rate_ramp_at is not None:
+        raise ValueError("rate_phases and rate_ramp_at are mutually exclusive")
     if cfg.rate_ramp_at is not None and cfg.rate_ramp != 1.0:
         t0 = cfg.rate_ramp_at
         times = np.where(times > t0, t0 + (times - t0) / cfg.rate_ramp, times)
+    elif cfg.rate_phases:
+        times = warp_times(times, cfg.rate_phases)
     out: List[rq.Request] = []
     for t, i, o in zip(times, ins, outs):
         if cfg.pipeline == "regular":
